@@ -1,0 +1,54 @@
+"""Wall-time microbenchmarks of the Pallas kernels (interpret mode on CPU —
+relative numbers only; TPU is the compile target) and of the pure-JAX
+decoupled SpMM core vs its chunked rolling-eviction variant.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spgemm
+from repro.data.synthetic import powerlaw_graph
+
+
+def timeit(fn, *args, n=5):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    n, e, d = 8192, 65536, 64
+    s, r = powerlaw_graph(n, e + 2000, seed=1)
+    s, r = s[:e], r[:e]
+    vals = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    rj, cj, vj = jnp.asarray(r), jnp.asarray(s), jnp.asarray(vals)
+
+    f_full = jax.jit(lambda: spgemm.spmm(rj, cj, vj, x, n))
+    rows.append(("spmm_decoupled_full", timeit(lambda _: f_full(), 0),
+                 f"E={e};d={d}"))
+    f_chunk = jax.jit(lambda: spgemm.spmm_chunked(rj, cj, vj, x, n,
+                                                  chunk=8192))
+    rows.append(("spmm_rolling_chunked", timeit(lambda _: f_chunk(), 0),
+                 "chunk=8192"))
+    return rows
+
+
+def main():
+    print("# kernel microbenchmarks (CPU wall-time; relative only)")
+    print("name,us_per_call,derived")
+    for name, us, extra in run():
+        print(f"{name},{us:.0f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""§Roofline table — aggregates the dry-run JSON records into the
+per-(arch × shape × mesh) three-term roofline table (EXPERIMENTS.md source).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments/dryrun"
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / f"*__{mesh}.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck"
+           " | MODEL_FLOPS | useful | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        temp = (r["memory_analysis"].get("temp_size_in_bytes") or 0) / 1e9
+        out.append(
+            f"| {rf['arch']} | {rf['shape']} | {rf['compute_s']:.3g} "
+            f"| {rf['memory_s']:.3g} | {rf['collective_s']:.3g} "
+            f"| {rf['bottleneck']} | {rf['model_flops']:.3g} "
+            f"| {rf['useful_ratio']:.2f} | {temp:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    print("# roofline summary (single-pod 16x16)")
+    print("name,us_per_call,derived")
+    for r in rows:
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom if dom > 0 else 0.0
+        print(f"roofline_{rf['arch']}__{rf['shape']},"
+              f"{r['compile_s']*1e6:.0f},"
+              f"bottleneck={rf['bottleneck']};roofline_frac={frac:.3f};"
+              f"useful={rf['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

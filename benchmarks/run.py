@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all, CSV to stdout
+
+Modules: bloat_table (Table 1), speedup_table (Table 5 / Fig 16),
+mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
+(Fig 17), kernel_bench (Pallas kernels), roofline (§Roofline from dry-run).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bloat_table, cpi_histograms, gnn_speedup,
+                        kernel_bench, mapping_heatmap, roofline,
+                        speedup_table)
+
+MODULES = [
+    ("table1_bloat", bloat_table),
+    ("table5_fig16_speedups", speedup_table),
+    ("fig12_13_mapping", mapping_heatmap),
+    ("fig14_15_cpi", cpi_histograms),
+    ("fig17_gnn", gnn_speedup),
+    ("pallas_kernels", kernel_bench),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    failures = 0
+    for name, mod in MODULES:
+        print(f"\n### {name}")
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"### {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"### {name} FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

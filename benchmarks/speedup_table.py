@@ -1,0 +1,53 @@
+"""Paper Table 5 / Figure 16 — SpGEMM GOP/s per NeuraChip config and speedup
+vs published CPU/GPU/accelerator baselines.
+
+NeuraChip throughput comes from the calibrated NeuraSim model on the Table-1
+(synthetic) workload set; baselines use the paper's published GOP/s.  The
+headline claims (22.1× MKL, 13.3× cuSPARSE, 1.5× Gamma, T64/T16 inversion)
+are reproduced as ratios of those numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.neurasim import datasets, machine, model
+
+
+def run(fast: bool = True):
+    names = datasets.FAST_SET if fast else list(datasets.TABLE1)
+    workloads = []
+    for name in names:
+        s, r, n = datasets.synth(name)
+        workloads.append(model.stats_from_coo(s, r, n))
+    out = {}
+    for cname, cfg in machine.CONFIGS.items():
+        t0 = time.time()
+        gops = [model.simulate_spgemm(w, cfg).gops for w in workloads]
+        out[cname] = (float(np.mean(gops)),
+                      (time.time() - t0) / len(gops) * 1e6)
+    t64_dual = dataclasses.replace(machine.TILE64, dram_bw_gbps=256.0)
+    out["tile64_dual_hbm"] = (float(np.mean(
+        [model.simulate_spgemm(w, t64_dual).gops for w in workloads])), 0.0)
+    return out
+
+
+def main():
+    res = run()
+    print("# Table 5 / Fig 16 repro")
+    print("name,us_per_call,derived")
+    for cname, (gops, us) in res.items():
+        paper = machine.PAPER_NEURACHIP_GOPS.get(
+            cname, machine.PAPER_TILE64_DUAL_HBM)
+        print(f"neurasim_{cname},{us:.0f},gops={gops:.2f};paper={paper}")
+    t16 = res["tile16"][0]
+    for base, bgops in machine.PUBLISHED_GOPS.items():
+        claim = machine.PAPER_SPEEDUPS_TILE16[base]
+        print(f"speedup_vs_{base.split(' ')[0]},0,"
+              f"ours={t16 / bgops:.1f}x;paper={claim}x")
+
+
+if __name__ == "__main__":
+    main()

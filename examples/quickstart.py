@@ -1,0 +1,65 @@
+"""Quickstart: the paper's workload — GCN on a Cora-scale graph — trained
+end-to-end on the decoupled SpGEMM core.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import spgemm
+from repro.data import synthetic as syn
+from repro.models.gnn import gcn
+from repro.optim import adamw
+from repro.sparse.graph import make_graph, sym_norm_weights
+
+
+def main():
+    # 1. data: Cora-shaped synthetic graph (2708 nodes / 10556 edges / 1433 d)
+    s, r, x, y, n_classes = syn.cora_like()
+    n = 2708
+    s2, r2, w = sym_norm_weights(s, r, n)
+    g = make_graph(s2, r2, n, w)
+    x = np.vstack([x, np.zeros((1, x.shape[1]), np.float32)])   # ghost row
+    labels = jnp.asarray(np.concatenate([y, [0]]).astype(np.int32))
+    mask = np.zeros(n + 1, bool)
+    mask[:140] = True                                           # Cora split
+    mask = jnp.asarray(mask)
+    xj = jnp.asarray(x)
+
+    # 2. model: the paper's GCN, aggregation = decoupled Gustavson SpMM
+    cfg = dataclasses.replace(registry.get_config("gcn-cora"),
+                              d_in=x.shape[1], n_classes=n_classes)
+    params = gcn.init_params(jax.random.key(0), cfg)
+    opt = adamw.init_state(params)
+    ocfg = adamw.AdamWConfig(lr=1e-2)
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(gcn.loss_fn)(
+            params, cfg, xj, g.senders, g.receivers, g.edge_weight,
+            g.edge_valid, labels, mask)
+        params, opt, _ = adamw.apply_updates(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    for i in range(80):
+        params, opt, loss = step(params, opt)
+        if i % 20 == 0 or i == 79:
+            print(f"step {i:3d}  loss {float(loss):.4f}")
+
+    # 3. the same aggregation, three ways (all equal):
+    h = xj @ params["layer0"]["w"]
+    full = spgemm.spmm_masked(g.receivers, g.senders, g.edge_weight, h,
+                              xj.shape[0], g.edge_valid)
+    rolling = spgemm.spmm_chunked(g.receivers, g.senders,
+                                  g.edge_weight * g.edge_valid, h,
+                                  xj.shape[0], chunk=1024)
+    print("rolling-eviction == one-shot:",
+          bool(jnp.allclose(full, rolling, atol=1e-4)))
+
+
+if __name__ == "__main__":
+    main()

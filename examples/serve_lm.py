@@ -1,0 +1,12 @@
+"""Serve a small LM with batched requests (prefill + KV-cache decode).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--batch", "8", "--prompt-len", "64",
+                "--gen", "32"] + sys.argv[1:]
+    raise SystemExit(serve.main())

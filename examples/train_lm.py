@@ -1,0 +1,13 @@
+"""Train a ~100M-parameter LM for a few hundred steps (end-to-end driver).
+
+  PYTHONPATH=src python examples/train_lm.py            # full 300 steps
+  PYTHONPATH=src python examples/train_lm.py --steps 20 # quick look
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--preset", "lm100m", "--steps", "300",
+                "--batch", "4", "--seq", "256"] + sys.argv[1:]
+    raise SystemExit(train.main())

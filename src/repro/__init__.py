@@ -1,0 +1,2 @@
+"""repro — NeuraChip (ISCA'24) reproduced as a multi-pod JAX framework."""
+__version__ = "0.1.0"

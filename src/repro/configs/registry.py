@@ -1,0 +1,148 @@
+"""Architecture registry: id → family, configs, shape set, input specs.
+
+``input_specs(arch, shape)`` returns (inputs-pytree of ShapeDtypeStruct,
+statics dict) — weak-type-correct, shardable, zero allocation; the only
+representation the multi-pod dry-run ever touches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as S
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    family: str           # "lm" | "gnn" | "recsys"
+    module: str
+    gnn_kind: str = ""    # "" | "conv" (gcn/gat) | "geom" (schnet/dimenet)
+
+
+ARCHS: Dict[str, ArchEntry] = {
+    "llama4-maverick-400b-a17b": ArchEntry(
+        "llama4-maverick-400b-a17b", "lm",
+        "repro.configs.llama4_maverick_400b_a17b"),
+    "grok-1-314b": ArchEntry("grok-1-314b", "lm", "repro.configs.grok_1_314b"),
+    "gemma-7b": ArchEntry("gemma-7b", "lm", "repro.configs.gemma_7b"),
+    "qwen3-0.6b": ArchEntry("qwen3-0.6b", "lm", "repro.configs.qwen3_0_6b"),
+    "deepseek-67b": ArchEntry("deepseek-67b", "lm", "repro.configs.deepseek_67b"),
+    "schnet": ArchEntry("schnet", "gnn", "repro.configs.schnet", "geom"),
+    "gcn-cora": ArchEntry("gcn-cora", "gnn", "repro.configs.gcn_cora", "conv"),
+    "dimenet": ArchEntry("dimenet", "gnn", "repro.configs.dimenet", "geom"),
+    "gat-cora": ArchEntry("gat-cora", "gnn", "repro.configs.gat_cora", "conv"),
+    "dlrm-rm2": ArchEntry("dlrm-rm2", "recsys", "repro.configs.dlrm_rm2"),
+}
+
+
+def shapes_for(arch_id: str) -> Dict[str, Any]:
+    fam = ARCHS[arch_id].family
+    return {"lm": S.LM_SHAPES, "gnn": S.GNN_SHAPES,
+            "recsys": S.RECSYS_SHAPES}[fam]
+
+
+def all_cells():
+    """All 40 (arch, shape) cells."""
+    for arch_id in ARCHS:
+        for shape_name in shapes_for(arch_id):
+            yield arch_id, shape_name
+
+
+def get_config(arch_id: str, reduced: bool = False, shape=None):
+    mod = importlib.import_module(ARCHS[arch_id].module)
+    cfg = mod.reduced() if reduced else mod.FULL
+    # GNN conv archs adapt input/output dims to the dataset shape
+    if ARCHS[arch_id].gnn_kind == "conv" and shape is not None and not reduced:
+        cfg = dataclasses.replace(cfg, d_in=shape.d_feat,
+                                  n_classes=shape.n_classes)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def _lm_specs(cfg, shape: S.LMShape):
+    from repro.models.lm import transformer as T
+    if shape.kind == "train":
+        return {"tokens": SDS((shape.batch, shape.seq_len), jnp.int32)}, {}
+    if shape.kind == "prefill":
+        return {"tokens": SDS((shape.batch, shape.seq_len), jnp.int32)}, {}
+    # decode: one token + cache
+    cache = T.cache_specs(cfg, shape.batch, shape.seq_len, dtype=cfg.adt)
+    return {
+        "tokens": SDS((shape.batch, 1), jnp.int32),
+        "cache": cache,
+        "cache_index": SDS((), jnp.int32),
+    }, {}
+
+
+def _gnn_specs(arch_id: str, cfg, shape: S.GNNShape):
+    kind = ARCHS[arch_id].gnn_kind
+    if shape.kind == "minibatch":
+        n_pad = S.pad_to_multiple(S.minibatch_node_budget(shape) + 1)
+        e_pad = S.pad_to_multiple(S.minibatch_edge_budget(shape))
+    elif shape.kind == "molecule":
+        n_pad = S.pad_to_multiple(shape.batch * shape.n_nodes + 1)
+        e_pad = S.pad_to_multiple(shape.batch * shape.n_edges)
+    else:
+        n_pad, e_pad = shape.n_nodes_pad, shape.n_edges_pad
+    n_graphs = shape.batch if shape.kind == "molecule" else 1
+    base = {
+        "senders": SDS((e_pad,), jnp.int32),
+        "receivers": SDS((e_pad,), jnp.int32),
+        "edge_valid": SDS((e_pad,), jnp.bool_),
+    }
+    statics = {"n_nodes_pad": n_pad, "n_edges_pad": e_pad, "n_graphs": n_graphs}
+    if kind == "conv":
+        base["x"] = SDS((n_pad, shape.d_feat), jnp.float32)
+        base["labels"] = SDS((n_pad,), jnp.int32)
+        base["label_mask"] = SDS((n_pad,), jnp.bool_)
+        if arch_id.startswith("gcn"):
+            base["edge_weight"] = SDS((e_pad,), jnp.float32)
+        return base, statics
+    # geometric models (schnet / dimenet): positions are synthesized for
+    # non-molecular graphs (DESIGN.md §5)
+    base["species"] = SDS((n_pad,), jnp.int32)
+    base["pos"] = SDS((n_pad, 3), jnp.float32)
+    base["graph_ids"] = SDS((n_pad,), jnp.int32)
+    base["targets"] = SDS((n_graphs,), jnp.float32)
+    if arch_id == "dimenet":
+        t_pad = e_pad * shape.triplet_cap
+        base["t_in"] = SDS((t_pad,), jnp.int32)
+        base["t_out"] = SDS((t_pad,), jnp.int32)
+        base["t_valid"] = SDS((t_pad,), jnp.bool_)
+    return base, statics
+
+
+def _recsys_specs(cfg, shape: S.RecSysShape):
+    base = {
+        "dense": SDS((shape.batch, cfg.n_dense), jnp.float32),
+        "sparse_ids": SDS((shape.batch, cfg.n_sparse, cfg.multi_hot),
+                          jnp.int32),
+    }
+    if shape.kind == "train":
+        base["labels"] = SDS((shape.batch,), jnp.float32)
+    if shape.kind == "retrieval":
+        c_pad = 1 << 20        # 1,048,576 ≥ 1M candidates, mesh-divisible
+        base["candidates"] = SDS((c_pad, cfg.embed_dim), jnp.float32)
+    return base, {}
+
+
+def input_specs(arch_id: str, shape_name: str, reduced: bool = False
+                ) -> Tuple[dict, dict]:
+    shape = shapes_for(arch_id)[shape_name]
+    cfg = get_config(arch_id, reduced=reduced, shape=shape)
+    fam = ARCHS[arch_id].family
+    if fam == "lm":
+        return _lm_specs(cfg, shape)
+    if fam == "gnn":
+        return _gnn_specs(arch_id, cfg, shape)
+    return _recsys_specs(cfg, shape)

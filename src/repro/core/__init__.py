@@ -1,0 +1,8 @@
+"""NeuraChip's contributions as composable JAX modules.
+
+* ``drhm``        — Dynamic Reseeding Hash-based Mapping (C2)
+* ``spgemm``      — decoupled multiply/accumulate SpMM/SpGEMM (C1)
+* ``eviction``    — rolling-eviction accumulation schedules (C3)
+* ``distributed`` — pod-scale DRHM-sharded decoupled SpMM (C1+C2+C3)
+"""
+from repro.core import distributed, drhm, eviction, spgemm  # noqa: F401

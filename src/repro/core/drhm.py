@@ -1,0 +1,191 @@
+"""Dynamic Reseeding Hash-based Mapping (DRHM) — paper §3.5, Eq. (3)/(4).
+
+The paper maps partial-product TAGs onto NeuraMem units with
+
+    H_l(TAG, gamma) = ((TAG << k) >> k) * gamma  mod N          (lower-k bits)
+    H_h(TAG, gamma) = ((TAG >> k) << k) * gamma  mod N          (upper-k bits)
+
+reseeding ``gamma`` after every computed row so no sparsity pattern can pin a
+hot spot onto one unit.  The paper selects the lower-k variant (fewer
+collisions, §3.5), and so do we.
+
+At pod scale the same function becomes the *ownership* map: which device owns
+a destination row / embedding row / expert slot.  Two requirements from paper
+§2.4 carry over verbatim — consistency (same id → same owner within a round)
+and sparsity-agnostic uniformity.  We add a third that the ASIC did not need:
+**bijectivity** over padded power-of-two domains (odd multiplier modulo 2^m),
+so the map can also be used as a cheap permutation with an exact inverse
+(needed to reshard checkpoints and to undo dispatch).
+
+Mapping variants ``ring`` / ``modular`` / ``random`` are kept for the paper's
+Figure 12/13 comparison benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_MERSENNE_PRIME = (1 << 31) - 1
+
+
+def reseed(key: jax.Array) -> Array:
+    """Draw a fresh odd gamma (odd ⇒ bijective mod any power of two)."""
+    g = jax.random.randint(key, (), minval=1, maxval=2**30, dtype=jnp.int32)
+    return (g * 2 + 1).astype(jnp.uint32)
+
+
+def drhm_hash(tags: Array, gamma: Array, n_bins: int, k: int = 16) -> Array:
+    """Lower-k-bit DRHM hash (paper Eq. 3), high-bits variant.
+
+    Eq. 3 as literally written — ``(low_k(TAG)·γ) mod N`` — degenerates when
+    N is a power of two and TAGs share a power-of-two stride (the product's
+    low bits are then constant), so we take the product's HIGH bits instead
+    (Fibonacci multiplicative hashing).  Same hardware structure — one
+    reseeded multiplier — with actual mixing; deviation noted in DESIGN.md §8.
+    """
+    t = tags.astype(jnp.uint32) & jnp.uint32((1 << k) - 1)
+    prod = t * gamma.astype(jnp.uint32)
+    shift = 32 - max(1, int(np.ceil(np.log2(max(n_bins, 2)))))
+    return ((prod >> jnp.uint32(shift)) % jnp.uint32(n_bins)).astype(jnp.int32)
+
+
+def drhm_hash_upper(tags: Array, gamma: Array, n_bins: int, k: int = 16) -> Array:
+    """Upper-k-bit DRHM hash (paper Eq. 4) — kept for the design-space study."""
+    t = (tags.astype(jnp.uint32) >> jnp.uint32(k)) << jnp.uint32(k)
+    return ((t * gamma.astype(jnp.uint32)) % jnp.uint32(n_bins)).astype(jnp.int32)
+
+
+def drhm_permutation(n: int, gamma: int) -> np.ndarray:
+    """Bijective DRHM permutation of [0, n): requires gcd(gamma, n) == 1.
+
+    perm[i] = (i * gamma) mod n.  Host-side (used by shard planners).
+    """
+    import math
+    assert math.gcd(n, gamma) == 1, f"gamma {gamma} not coprime to {n}"
+    idx = np.arange(n, dtype=np.uint64)
+    return ((idx * np.uint64(gamma)) % np.uint64(n)).astype(np.int64)
+
+
+_GAMMA_PRIMES = (2654435761, 40503, 2246822519, 3266489917, 668265263)
+
+
+def coprime_gamma(n: int, seed: int = 0) -> int:
+    """Pick a large multiplier coprime to n (bijectivity for any pad size)."""
+    import math
+    for i in range(len(_GAMMA_PRIMES)):
+        g = _GAMMA_PRIMES[(seed + i) % len(_GAMMA_PRIMES)] | 1
+        if math.gcd(n, g) == 1:
+            return g
+    g = 3
+    while math.gcd(n, g) != 1:
+        g += 2
+    return g
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    return inv
+
+
+# ---------------------------------------------------------------------------
+# Mapping variants for the paper's Figure 12/13 comparison
+# ---------------------------------------------------------------------------
+
+def ring_map(tags: Array, n_bins: int, **_) -> Array:
+    """Round-robin / ring mapping (paper: Takenaka et al.)."""
+    return (tags % n_bins).astype(jnp.int32)
+
+
+def modular_map(tags: Array, n_bins: int, prime: int = 2654435761, **_) -> Array:
+    """Prime-multiplier modular hashing (paper: Bhullar et al.) — fixed seed."""
+    t = tags.astype(jnp.uint32) * jnp.uint32(prime % (1 << 32))
+    return (t % jnp.uint32(n_bins)).astype(jnp.int32)
+
+
+def random_map(tags: Array, n_bins: int, lookup: Array = None, **_) -> Array:
+    """Ideal random mapping via an explicit lookup table (impractical on ASIC —
+    the paper's strawman; we materialize it for benchmarking only)."""
+    assert lookup is not None, "random_map requires a lookup table"
+    return lookup[tags]
+
+
+def drhm_map(tags: Array, n_bins: int, gamma: Array = None, k: int = 16, **_) -> Array:
+    assert gamma is not None
+    return drhm_hash(tags, gamma, n_bins, k=k)
+
+
+MAPPINGS: Dict[str, Callable] = {
+    "ring": ring_map,
+    "modular": modular_map,
+    "random": random_map,
+    "drhm": drhm_map,
+}
+
+
+# ---------------------------------------------------------------------------
+# Balance statistics (hot-spot metrics for Fig 12/13 + property tests)
+# ---------------------------------------------------------------------------
+
+def bin_counts(assignment: Array, n_bins: int) -> Array:
+    return jax.ops.segment_sum(jnp.ones_like(assignment, dtype=jnp.int32),
+                               assignment, num_segments=n_bins)
+
+
+def imbalance(assignment: Array, n_bins: int) -> Array:
+    """max/mean bin load — 1.0 is perfect balance (the paper's hot-spot metric)."""
+    c = bin_counts(assignment, n_bins).astype(jnp.float32)
+    return jnp.max(c) / jnp.maximum(jnp.mean(c), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Shard planner: DRHM as a distribution policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DRHMShardPlan:
+    """Host-side plan assigning ``n_ids`` row ids to ``n_shards`` equally-sized
+    shards through the DRHM bijective permutation.
+
+    ``perm[i]``  = position of row i in the hash-shuffled order;
+    shard of row i = perm[i] // rows_per_shard.  Because the permutation is a
+    bijection, every shard holds exactly ``n_pad / n_shards`` rows, i.e. the
+    load balance is *exact*, not just statistical — the pod-scale strengthening
+    of the paper's uniformity claim.
+    """
+
+    gamma: int
+    n_ids: int
+    n_pad: int
+    n_shards: int
+    perm: np.ndarray      # (n_pad,) destination slot of each (padded) row id
+    inv_perm: np.ndarray  # (n_pad,) row id occupying each slot
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.n_pad // self.n_shards
+
+    def owner_of(self, ids: np.ndarray) -> np.ndarray:
+        return self.perm[ids] // self.rows_per_shard
+
+    def slot_of(self, ids: np.ndarray) -> np.ndarray:
+        """Slot within the owning shard."""
+        return self.perm[ids] % self.rows_per_shard
+
+
+def plan_row_sharding(n_ids: int, n_shards: int, gamma: int) -> DRHMShardPlan:
+    n_pad = ((max(n_ids, n_shards) + n_shards - 1) // n_shards) * n_shards
+    g = gamma | 1
+    import math
+    if math.gcd(n_pad, g) != 1:
+        g = coprime_gamma(n_pad, seed=gamma % 5)
+    perm = drhm_permutation(n_pad, g)
+    return DRHMShardPlan(gamma=g, n_ids=n_ids, n_pad=n_pad,
+                         n_shards=n_shards, perm=perm,
+                         inv_perm=invert_permutation(perm))

@@ -1,0 +1,123 @@
+"""Decoupled Gustavson SpMM/SpGEMM — the paper's C1, in JAX.
+
+The paper splits sparse matmul into a *multiplication stage* (NeuraCore: gather
+operands from HBM, form partial products) and an *accumulation stage*
+(NeuraMem: hash-merge partial products on-chip).  In JAX the same decoupling is
+explicit dataflow:
+
+    multiply_stage :  pp[e]  = A_val[e] * X[A_col[e], :]        (gather-bound)
+    accumulate     :  Y[r]   = segment_sum(pp, A_row, n_rows)   (scatter-bound)
+
+Everything downstream (GNN layers, EmbeddingBag, distributed SpMM) is built on
+these two functions so the decoupling is a *framework property*, not a kernel
+detail.  ``spmm_chunked`` is the rolling-eviction variant (C3): partial
+products are produced and folded in fixed-size chunks so the interim working
+set is O(chunk · d) instead of O(nnz · d) — the XLA analogue of evicting a
+hash-line the moment its counter hits zero.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — multiplication (NeuraCore analogue)
+# ---------------------------------------------------------------------------
+
+def multiply_stage(cols: Array, vals: Optional[Array], x: Array) -> Array:
+    """Produce partial products for every nnz: pp[e] = vals[e] * x[cols[e]].
+
+    cols: (E,) int32 gather indices into x's rows.
+    vals: (E,) or None (None ⇒ implicit 1.0, e.g. unweighted adjacency).
+    x:    (N, D) dense operand.
+    Returns (E, D) partial products.
+    """
+    pp = jnp.take(x, cols, axis=0)
+    if vals is not None:
+        pp = pp * vals[:, None].astype(pp.dtype)
+    return pp
+
+
+# ---------------------------------------------------------------------------
+# Stage 2 — accumulation (NeuraMem analogue)
+# ---------------------------------------------------------------------------
+
+def accumulate_stage(pp: Array, rows: Array, n_rows: int) -> Array:
+    """Merge partial products by destination row (hash-accumulate analogue)."""
+    return jax.ops.segment_sum(pp, rows, num_segments=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# Full decoupled SpMM
+# ---------------------------------------------------------------------------
+
+def spmm(rows: Array, cols: Array, vals: Optional[Array], x: Array,
+         n_rows: int) -> Array:
+    """Y = A @ X with A given as COO (rows, cols, vals). Padding edges must
+    point at row ``n_rows`` — callers pass ``n_rows + 1`` segments implicitly
+    via the convention that we allocate one ghost row and drop it."""
+    pp = multiply_stage(cols, vals, x)
+    return accumulate_stage(pp, rows, n_rows)
+
+
+def spmm_masked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
+                n_rows: int, valid: Array) -> Array:
+    """SpMM over a padded edge list: invalid lanes contribute nothing."""
+    pp = multiply_stage(cols, vals, x)
+    pp = jnp.where(valid[:, None], pp, 0)
+    return accumulate_stage(pp, rows, n_rows)
+
+
+@partial(jax.jit, static_argnames=("n_rows", "chunk"))
+def spmm_chunked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
+                 n_rows: int, chunk: int = 8192) -> Array:
+    """Rolling-eviction SpMM (paper C3).
+
+    Edges are processed in ``chunk``-sized waves; each wave's partial products
+    are folded into the output immediately, so peak interim memory is
+    O(chunk · D).  Requires E % chunk == 0 (pad edges first).
+    """
+    e = rows.shape[0]
+    assert e % chunk == 0, f"edge count {e} not divisible by chunk {chunk}"
+    n_chunks = e // chunk
+    rows_c = rows.reshape(n_chunks, chunk)
+    cols_c = cols.reshape(n_chunks, chunk)
+    vals_c = None if vals is None else vals.reshape(n_chunks, chunk)
+
+    def body(acc, inputs):
+        if vals_c is None:
+            r, c = inputs
+            v = None
+        else:
+            r, c, v = inputs
+        pp = multiply_stage(c, v, x)
+        acc = acc + jax.ops.segment_sum(pp, r, num_segments=n_rows)
+        return acc, None
+
+    init = jnp.zeros((n_rows, x.shape[1]), dtype=x.dtype)
+    xs = (rows_c, cols_c) if vals_c is None else (rows_c, cols_c, vals_c)
+    acc, _ = jax.lax.scan(body, init, xs)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM (sparse × sparse) — reference semantics for the paper's SpGEMM tables
+# ---------------------------------------------------------------------------
+
+def spgemm_via_dense(a_rows, a_cols, a_vals, n, b_rows, b_cols, b_vals, m, k):
+    """Reference C = A@B with A (n×m), B (m×k) as COO — densifies B.  Used only
+    by tests/benchmarks at small scale; production path is SpMM on features."""
+    b_dense = jnp.zeros((m, k), dtype=jnp.float32).at[b_rows, b_cols].add(b_vals)
+    return spmm(a_rows, a_cols, a_vals, b_dense, n)
+
+
+def interim_partial_products(a_cols: Array, b_row_nnz: Array) -> Array:
+    """Number of interim partial products of Gustavson SpGEMM:  sum over nnz(A)
+    of nnz(B[col, :]).  Drives the paper's Table 1 bloat metric."""
+    return jnp.sum(jnp.take(b_row_nnz, a_cols))

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for causal flash attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    bh, s, d = q.shape
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,108 @@
+"""Gustavson SpMM Pallas TPU kernel — the paper's MMH4/HACC pipeline as a
+VMEM-tiled gather-multiply-accumulate with rolling eviction.
+
+TPU adaptation of the NeuraChip dataflow (DESIGN.md §2.1):
+
+* multiply stage (NeuraCore ≙ MMH4): per nnz, the source row of X is DMA'd
+  from HBM into a VMEM landing slot (double-buffered, so the next row's DMA
+  overlaps the current row's FMA) and scaled by the edge value;
+* accumulate stage (NeuraMem ≙ HACC): the partial product folds into a
+  (block_rows × D) VMEM accumulator tile — the HashPad analogue.  The CAM tag
+  match degenerates to a direct sublane index because edges were host-sorted
+  by destination row (pack_blocked_ell);
+* rolling eviction: the per-block completion counter ``remaining[b]`` is the
+  loop bound; the moment the last real nnz is folded the tile is evicted
+  (written back) to HBM and the next block's accumulation begins.  Padding
+  lanes are never touched — counters make the bloat window exactly one tile.
+
+Layout: grid = (n_blocks,).  cols/row_local live in SMEM via scalar prefetch
+(PrefetchScalarGridSpec); X stays in ANY/HBM and is row-gathered by explicit
+``pltpu.make_async_copy``; the accumulator and landing slots are VMEM scratch.
+
+Validated with interpret=True on CPU against ref.py; TPU is the target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+N_SLOTS = 2  # double-buffered landing slots for the row DMA pipeline
+
+
+def _kernel(cols_smem, rloc_smem, rem_smem, vals_ref, x_hbm, y_ref,
+            acc_ref, slot_ref, sems, *, nnz_pad: int, block_rows: int):
+    b = pl.program_id(0)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    n_real = rem_smem[b]                      # rolling-eviction counter
+
+    def start_dma(i):
+        c = cols_smem[b, i]
+        copy = pltpu.make_async_copy(
+            x_hbm.at[c], slot_ref.at[i % N_SLOTS], sems.at[i % N_SLOTS])
+        copy.start()
+        return copy
+
+    # warm-up: first DMA in flight
+    @pl.when(n_real > 0)
+    def _():
+        start_dma(0)
+
+    def body(i, _):
+        # wait for row i's landing slot, then immediately launch row i+1
+        pltpu.make_async_copy(
+            x_hbm.at[cols_smem[b, i]], slot_ref.at[i % N_SLOTS],
+            sems.at[i % N_SLOTS]).wait()
+
+        @pl.when(i + 1 < n_real)
+        def _():
+            start_dma(i + 1)
+
+        # multiply stage: partial product = v * X[row]
+        v = vals_ref[b, i]
+        pp = slot_ref[i % N_SLOTS, :] * v
+        # accumulate stage: fold into the HashPad tile at the local row
+        r = rloc_smem[b, i]
+        cur = pl.load(acc_ref, (pl.dslice(r, 1), slice(None)))
+        pl.store(acc_ref, (pl.dslice(r, 1), slice(None)), cur + pp[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, n_real, body, 0)
+    # eviction: counter exhausted → write the tile back to HBM
+    y_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmm_blocked_ell(cols: jax.Array, row_local: jax.Array, vals: jax.Array,
+                     remaining: jax.Array, x: jax.Array,
+                     block_rows: int = 8, interpret: bool = True) -> jax.Array:
+    """cols/row_local/vals: (n_blocks, nnz_pad) int32/int32/f32;
+    remaining: (n_blocks,) int32; x: (N, D) f32 → (n_blocks·block_rows, D)."""
+    n_blocks, nnz_pad = cols.shape
+    d = x.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,        # cols, row_local, remaining
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n_blocks, nnz_pad), lambda b, *_: (0, 0)),  # vals
+            pl.BlockSpec(memory_space=pltpu.ANY),                     # x (HBM)
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda b, *_: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, d), jnp.float32),    # accumulator tile
+            pltpu.VMEM((N_SLOTS, d), jnp.float32),       # DMA landing slots
+            pltpu.SemaphoreType.DMA((N_SLOTS,)),
+        ],
+    )
+    kernel = functools.partial(_kernel, nnz_pad=nnz_pad,
+                               block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, d),
+                                       jnp.float32),
+        interpret=interpret,
+    )(cols, row_local, remaining, vals, x)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper: COO → blocked-ELL → Pallas Gustavson SpMM."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_blocked_ell
+from repro.kernels.gustavson_spmm.ref import spmm_blocked_ell_ref
+from repro.sparse.graph import pack_blocked_ell
+
+
+def is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, x,
+         n_rows: int, block_rows: int = 8, use_kernel: bool = True):
+    """Y = A @ X.  Packs once (host), then runs the Pallas kernel (compiled on
+    TPU, interpret elsewhere).  Returns (n_rows, D) — padding rows stripped."""
+    ell = pack_blocked_ell(rows, cols, vals, n_rows, int(x.shape[0]),
+                           block_rows=block_rows)
+    args = (jax.numpy.asarray(ell.cols), jax.numpy.asarray(ell.row_local),
+            jax.numpy.asarray(ell.vals), jax.numpy.asarray(ell.remaining),
+            x)
+    if use_kernel:
+        y = spmm_blocked_ell(*args, block_rows=block_rows,
+                             interpret=not is_tpu())
+    else:
+        y = spmm_blocked_ell_ref(*args, block_rows)
+    return y[:n_rows]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the Gustavson SpMM kernel (blocked-ELL layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_blocked_ell_ref(cols: jax.Array, row_local: jax.Array,
+                         vals: jax.Array, remaining: jax.Array,
+                         x: jax.Array, block_rows: int) -> jax.Array:
+    """cols/row_local/vals: (n_blocks, nnz_pad); x: (N, D).
+    Returns (n_blocks * block_rows, D).  Padding lanes carry vals == 0."""
+    n_blocks, nnz_pad = cols.shape
+    rows_global = row_local + (jnp.arange(n_blocks, dtype=jnp.int32)[:, None]
+                               * block_rows)
+    pp = jnp.take(x, cols.reshape(-1), axis=0) * vals.reshape(-1)[:, None]
+    return jax.ops.segment_sum(pp, rows_global.reshape(-1),
+                               num_segments=n_blocks * block_rows)

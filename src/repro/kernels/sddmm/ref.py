@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the SDDMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def sddmm_ref(src: jax.Array, dst: jax.Array, x: jax.Array,
+              y: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.take(x, src, axis=0) * jnp.take(y, dst, axis=0),
+                   axis=-1)

@@ -1,0 +1,148 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+``cost_analysis()`` gives HLO flops/bytes; collective bytes are NOT in it, so
+we parse the *partitioned* HLO text (shapes there are per-device) and apply
+per-collective wire-byte models:
+
+  all-gather          ≈ out_bytes · (g−1)/g      (ring)
+  reduce-scatter      ≈ in_bytes  · (g−1)/g
+  all-reduce          ≈ 2 · bytes · (g−1)/g      (RS + AG)
+  all-to-all          ≈ bytes · (g−1)/g
+  collective-permute  ≈ bytes
+
+g = replica-group size parsed per op.  Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List
+
+# --- TPU v5e per-chip constants -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (~ per-device effective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes inside a (possibly tuple) shape str."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{([^}]*)\}", line)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        if ids:
+            return len(ids)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota shape [n_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]          # op kind → wire bytes (per device)
+    total_bytes: float
+    op_counts: Dict[str, int]
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    per_op: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "  %name = <shape> <op>(" — op name right before '('
+        m = re.match(r"%?[\w\.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start)?\(", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done" in ls.split("(")[0]:
+            continue
+        g = _group_size(ls, n_devices)
+        if g <= 1:
+            continue
+        out_b = _shape_bytes(shape_str)
+        ring = (g - 1) / g
+        if op == "all-gather":
+            wire = out_b * ring
+        elif op == "reduce-scatter":
+            wire = out_b * (g - 1)          # in_bytes·(g−1)/g = out·g·(g−1)/g
+        elif op == "all-reduce":
+            wire = 2 * out_b * ring
+        elif op == "all-to-all":
+            wire = out_b * ring
+        else:  # collective-permute
+            wire = out_b
+        per_op[op] += wire
+        counts[op] += 1
+    return CollectiveStats(per_op=per_op,
+                           total_bytes=sum(per_op.values()),
+                           op_counts=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float                 # per-device (cost_analysis is per-program)
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float               # analytic 6·N·D etc. (global)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float              # model_flops / (hlo_flops · n_devices)
+    mem_per_device: float = 0.0
+    notes: str = ""
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def make_roofline(arch, shape, mesh_name, n_devices, flops: float,
+                  byts: float, coll_bytes: float, model_flops: float,
+                  mem_per_device: float = 0.0, notes: str = "") -> Roofline:
+    """flops / byts / coll_bytes are per-device, while-trip-corrected."""
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll_bytes,
+        model_flops=model_flops, compute_s=compute_s, memory_s=memory_s,
+        collective_s=coll_s, bottleneck=max(terms, key=terms.get),
+        useful_ratio=(model_flops / (flops * n_devices)) if flops else 0.0,
+        mem_per_device=mem_per_device, notes=notes,
+    )

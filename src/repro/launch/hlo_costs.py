@@ -1,0 +1,344 @@
+"""While-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which makes
+scanned programs (layer stacks, blocked attention, chunked losses) report
+1/trip_count of their true flops.  XLA annotates every while with
+``known_trip_count{"n":...}`` after optimization, so we re-walk the
+post-partitioning HLO text, cost each computation bottom-up, and multiply
+loop bodies by their trip counts.
+
+Costs counted:
+* flops  — dot ops: 2 · |output| · |contracting dims| (convs not used here)
+* bytes  — per top-level instruction: output + operand bytes for ops that
+  touch memory (fusions, dots, copies, elementwise majors); free ops
+  (tuple/gte/parameter/bitcast/constant) excluded.  Control-flow ops recurse.
+
+This is the roofline source of truth for §Roofline; plain cost_analysis() is
+recorded alongside for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "add-dependency", "domain", "partition-id", "replica-id",
+}
+
+_SHAPE_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    inner: str = ""
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+
+
+def _parse_instr_line(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """-> (name, shape, op, rest-after-open-paren) or None.
+
+    Handles tuple shapes, which may contain parens and '=' inside
+    ``/*index=N*/`` comments.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):          # tuple shape — find matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rest[: i + 1]
+                    rest = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return name, shape, op, rest[par + 1:]
+
+
+def _parse_operands(rest: str) -> Tuple[List[str], str, str]:
+    """Split the operand list (up to matching paren) from trailing attrs."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                ops = re.findall(r"%([\w\.\-]+)", inner)
+                return ops, attrs, inner
+    return re.findall(r"%([\w\.\-]+)", rest), "", rest
+
+
+def parse_module(hlo: str) -> Dict[str, List[Instr]]:
+    """computation name → instruction list (ENTRY stored as 'ENTRY')."""
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m:
+                cur = "ENTRY" if line.startswith("ENTRY") else m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, shape, op, rest = parsed
+        operands, attrs, inner = _parse_operands(rest)
+        comps[cur].append(Instr(name=name, shape=shape.strip(), op=op,
+                                operands=operands, attrs=attrs, inner=inner))
+    return comps
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = 1
+    for _, dims in _shape_dims(ins.shape):
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if m and ins.operands:
+        lhs_shape = shapes.get(ins.operands[0], "")
+        arr = _shape_dims(lhs_shape)
+        if arr:
+            dims = arr[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(ins: Instr) -> int:
+    m = re.search(r'known_trip_count[^\d]*(\d+)', ins.attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _called_comps(ins: Instr) -> List[str]:
+    out = []
+    for key in ("body=", "condition=", "calls=", "branch_computations={",
+                "to_apply="):
+        for m in re.finditer(re.escape(key) + r"[%{]?%?([\w\.\-]+)", ins.attrs):
+            out.append(m.group(1))
+    return out
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        if ids:
+            return len(ids)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _coll_kind(op: str) -> Optional[str]:
+    for k in _COLLECTIVES:
+        if op == k or op == k + "-start":
+            return k
+    return None
+
+
+def _merge(a: Dict[str, float], b: Dict[str, float], scale: float = 1.0):
+    for k, v in b.items():
+        a[k] = a.get(k, 0.0) + scale * v
+
+
+class HloCost:
+    """Bottom-up cost walker: (flops, hbm bytes, collective wire bytes)."""
+
+    def __init__(self, hlo: str, n_devices: int = 1):
+        self.comps = parse_module(hlo)
+        self.n_devices = n_devices
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def comp_cost(self, name: str) -> Tuple[float, float, Dict[str, float]]:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = (0.0, 0.0, {})  # cycle guard
+        flops = byts = 0.0
+        coll: Dict[str, float] = {}
+        instrs = self.comps.get(name, [])
+        shapes = {i.name: i.shape for i in instrs}
+
+        def opb(i: int, ins: Instr) -> float:
+            if i < len(ins.operands):
+                return float(_shape_bytes(shapes.get(ins.operands[i], "")))
+            return 0.0
+
+        for ins in instrs:
+            if ins.op in _FREE_OPS:
+                continue
+            out_b = float(_shape_bytes(ins.shape))
+            kind = _coll_kind(ins.op)
+            if kind is not None:
+                g = _group_size(ins.attrs, self.n_devices)
+                if g > 1:
+                    ring = (g - 1) / g
+                    if kind == "all-gather":
+                        wire = out_b * ring
+                    elif kind == "reduce-scatter":
+                        wire = out_b * (g - 1)
+                    elif kind == "all-reduce":
+                        wire = 2 * out_b * ring
+                    elif kind == "all-to-all":
+                        wire = out_b * ring
+                    else:  # collective-permute
+                        wire = out_b
+                    _merge(coll, {kind: wire})
+                byts += out_b + sum(opb(i, ins) for i in range(len(ins.operands)))
+            elif ins.op == "while":
+                bf = bb = 0.0
+                bc: Dict[str, float] = {}
+                for sub in _called_comps(ins):
+                    f, b, c = self.comp_cost(sub)
+                    bf, bb = bf + f, bb + b
+                    _merge(bc, c)
+                t = _trip_count(ins)
+                flops += t * bf
+                byts += t * bb
+                _merge(coll, bc, scale=t)
+            elif ins.op in ("conditional", "call"):
+                for sub in _called_comps(ins):
+                    f, b, c = self.comp_cost(sub)
+                    flops += f
+                    byts += b
+                    _merge(coll, c)
+            elif ins.op == "fusion":
+                # fused internals never touch HBM: bytes = boundary only,
+                # flops = any dots living inside (rare on CPU)
+                subs = _called_comps(ins)
+                for sub in subs:
+                    f, _, c = self.comp_cost(sub)
+                    flops += f
+                    _merge(coll, c)
+                byts += out_b
+                byts += self._fusion_operand_bytes(ins, subs, shapes)
+            elif ins.op == "dot":
+                flops += _dot_flops(ins, shapes)
+                byts += out_b + opb(0, ins) + opb(1, ins)
+            elif ins.op in ("dynamic-slice", "gather"):
+                byts += 2 * out_b            # reads ≈ slice size, not operand
+            elif ins.op in ("broadcast", "iota", "rng", "constant"):
+                byts += out_b
+            elif ins.op == "dynamic-update-slice":
+                byts += out_b + 2 * opb(1, ins)
+            elif ins.op == "scatter":
+                byts += out_b + 3 * opb(2, ins)
+            else:
+                byts += out_b + sum(opb(i, ins) for i in range(len(ins.operands)))
+        self._memo[name] = (flops, byts, coll)
+        return self._memo[name]
+
+    def _fusion_operand_bytes(self, ins: Instr, subs: List[str],
+                              shapes: Dict[str, str]) -> float:
+        """Slice-aware operand accounting: a fusion parameter consumed only by
+        (dynamic-)slice/gather ops reads slice-sized bytes, not the full
+        operand (e.g. per-layer reads of stacked remat residuals)."""
+        total = 0.0
+        sub_instrs = None
+        for s in subs:
+            if s in self.comps:
+                sub_instrs = self.comps[s]
+                break
+        if sub_instrs is None:
+            return sum(float(_shape_bytes(shapes.get(o, "")))
+                       for o in ins.operands)
+        params: Dict[int, str] = {}
+        consumers: Dict[str, List[Instr]] = {}
+        for si in sub_instrs:
+            if si.op == "parameter":
+                m = re.match(r"\s*(\d+)", si.inner)
+                if m:
+                    params[int(m.group(1))] = si.name
+            for o in si.operands:
+                consumers.setdefault(o, []).append(si)
+        for i, o in enumerate(ins.operands):
+            full = float(_shape_bytes(shapes.get(o, "")))
+            pname = params.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(c.op in ("dynamic-slice", "slice", "gather")
+                            for c in cons):
+                total += sum(float(_shape_bytes(c.shape)) for c in cons)
+            else:
+                total += full
+        return total
+
+    def entry_cost(self) -> Tuple[float, float, Dict[str, float]]:
+        if "ENTRY" in self.comps:
+            return self.comp_cost("ENTRY")
+        # fallback: largest computation
+        best = max(self.comps, key=lambda c: len(self.comps[c]))
+        return self.comp_cost(best)
+
+
+def corrected_costs(hlo: str, n_devices: int = 1):
+    """(flops, bytes, collectives dict) per device, trip counts applied."""
+    return HloCost(hlo, n_devices).entry_cost()

@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill + decode loop with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --batch 8 --prompt-len 64 --gen 32
+
+Uses the reduced config on CPU (the full configs are exercised via the
+dry-run); the serving logic — prefill to fill the cache, then step-wise
+greedy decode over a request batch — is the production path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import synthetic as syn
+from repro.models.lm import transformer as T
+
+
+def serve_batch(params, cfg, prompts: jax.Array, s_max: int, gen: int):
+    """prompts: (B, P) → generated tokens (B, gen)."""
+    b, p = prompts.shape
+    logits, kv = T.prefill(params, cfg, prompts)
+    # prefill returns per-layer (B, P, KV, hd); place into an s_max cache
+    cache = T.init_cache(cfg, b, s_max)
+    cache = jax.tree.map(
+        lambda dst, src: jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), (0,) * dst.ndim),
+        cache, kv)
+
+    decode = jax.jit(lambda pr, tok, c, i: T.decode_step(pr, cfg, tok, c, i))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(gen - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(p + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, reduced=True)
+    params = T.init_params(jax.random.key(args.seed), cfg)
+    prompts = jnp.asarray(syn.token_batch(args.batch, args.prompt_len,
+                                          cfg.vocab, seed=args.seed))
+    s_max = args.prompt_len + args.gen
+    t0 = time.time()
+    toks = serve_batch(params, cfg, prompts, s_max, args.gen)
+    dt = time.time() - t0
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab)))
+    rate = args.batch * args.gen / dt
+    print(f"[serve] {args.arch} (reduced): batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} → {dt:.2f}s "
+          f"({rate:.0f} tok/s)  sample: {np.asarray(toks[0, :8]).tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

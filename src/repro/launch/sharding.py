@@ -1,0 +1,177 @@
+"""Sharding strategy registry — PartitionSpec rules per architecture family.
+
+Conventions (DESIGN.md §6):
+* ``dp``  — batch-parallel axes: ('data',) single-pod, ('pod','data') multi-pod.
+  Also the FSDP axis for parameter storage (ZeRO-3-style: weights gathered on
+  use by GSPMD).
+* ``tp``  — 'model' axis: tensor-parallel heads / d_ff / experts / vocab /
+  embedding-table rows.
+Non-divisible dims (e.g. 8 kv-heads over 16-way model axis, 40 q-heads over
+16) are legal: GSPMD pads — noted per-arch in EXPERIMENTS.md where it costs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.launch.mesh import dp_axes
+
+
+def _key_name(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    return str(k)
+
+
+def _path_names(path) -> tuple:
+    return tuple(_key_name(k) for k in path)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def lm_param_pspec(path, leaf, dp, tp, tp_size) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    if name == "embed":
+        return P(dp, tp)
+    if name == "unembed":
+        return P(dp, tp)
+    if name in ("final_norm", "ln1", "ln2", "q_norm", "k_norm"):
+        return P()
+    if name in ("wq", "wk", "wv"):
+        return P(None, dp, tp)
+    if name == "wo":
+        return P(None, tp, dp)
+    if name == "router":
+        return P(None, dp, None)
+    if name in ("wg", "wu", "wd"):
+        if leaf.ndim == 4:  # MoE (L, E, D, F) / (L, E, F, D)
+            e = leaf.shape[1]
+            if e % tp_size == 0:
+                return P(None, tp, dp, None)   # EP over experts
+            return P(None, None, dp, tp)       # few experts: shard D×F
+        if name == "wd":                        # dense (L, F, D)
+            return P(None, tp, dp)
+        return P(None, dp, tp)                  # dense (L, D, F)
+    return P()
+
+
+def gnn_param_pspec(path, leaf, dp, tp, tp_size) -> P:
+    # GNN parameters are tiny (≤ a few M) — replicate everything.
+    return P()
+
+
+def recsys_param_pspec(path, leaf, dp, tp, tp_size) -> P:
+    names = _path_names(path)
+    if "table" in names:
+        return P(tp, None)      # DRHM-permuted rows over the model axis
+    return P()                  # MLPs are small — replicate
+
+
+def param_pspecs(arch_id: str, param_tree, mesh) -> Any:
+    dp = dp_axes(mesh)
+    tp = "model"
+    tp_size = mesh.shape["model"]
+    fam = ARCHS[arch_id].family
+    rule = {"lm": lm_param_pspec, "gnn": gnn_param_pspec,
+            "recsys": recsys_param_pspec}[fam]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rule(path, leaf, dp, tp, tp_size), param_tree)
+
+
+# ---------------------------------------------------------------------------
+# Input rules
+# ---------------------------------------------------------------------------
+
+def lm_input_pspecs(shape, specs, mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = P(dp, None)
+        return out
+    # decode
+    if shape.batch >= 8:
+        out["tokens"] = P(dp, None)
+        cache_spec = P(None, dp, "model", None, None)   # seq over model axis
+    else:  # long_500k: batch 1 — shard the cache sequence over everything
+        out["tokens"] = P(None, None)
+        cache_spec = P(None, None, dp + ("model",), None, None)
+    out["cache"] = jax.tree.map(lambda _: cache_spec, specs["cache"])
+    out["cache_index"] = P()
+    return out
+
+
+def gnn_input_pspecs(arch_id, shape, specs, mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    out: Dict[str, Any] = {}
+    edge_keys = ("senders", "receivers", "edge_valid", "edge_weight")
+    node_keys = ("labels", "label_mask", "species", "graph_ids")
+    for k in specs:
+        if k in edge_keys:
+            out[k] = P(dp)
+        elif k in node_keys:
+            out[k] = P(dp)
+        elif k == "x":
+            out[k] = P(dp, None)
+        elif k == "pos":
+            out[k] = P(dp, None)
+        elif k in ("t_in", "t_out", "t_valid"):
+            out[k] = P(dp)
+        elif k == "targets":
+            out[k] = P(dp) if specs[k].shape[0] % (
+                2 * 16 if "pod" in mesh.axis_names else 16) == 0 else P()
+        else:
+            out[k] = P()
+    return out
+
+
+def recsys_input_pspecs(shape, specs, mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    out: Dict[str, Any] = {}
+    batch_shardable = shape.batch % (
+        32 if "pod" in mesh.axis_names else 16) == 0
+    bspec = dp if batch_shardable else None
+    for k in specs:
+        if k == "dense":
+            out[k] = P(bspec, None)
+        elif k == "sparse_ids":
+            out[k] = P(bspec, None, None)
+        elif k == "labels":
+            out[k] = P(bspec)
+        elif k == "candidates":
+            out[k] = P(dp + ("model",), None)
+    return out
+
+
+def input_pspecs(arch_id: str, shape, specs, mesh) -> Dict[str, Any]:
+    fam = ARCHS[arch_id].family
+    if fam == "lm":
+        return lm_input_pspecs(shape, specs, mesh)
+    if fam == "gnn":
+        return gnn_input_pspecs(arch_id, shape, specs, mesh)
+    return recsys_input_pspecs(shape, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Assembly helpers
+# ---------------------------------------------------------------------------
+
+def to_named(tree_pspec, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_pspecs(param_pspec_tree):
+    """AdamW state: step replicated; m/v mirror parameter specs."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=param_pspec_tree,
+                      v=jax.tree.map(lambda s: s, param_pspec_tree,
+                                     is_leaf=lambda x: isinstance(x, P)))

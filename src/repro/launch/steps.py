@@ -1,0 +1,131 @@
+"""Step-function builders per architecture family.
+
+Every builder returns a pure function suitable for ``jax.jit`` /
+``.lower().compile()`` — train steps take (params, opt_state, batch) and
+return (params, opt_state, metrics); serve steps take (params, batch[, cache])
+and return outputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.optim import adamw
+
+
+def _train_wrap(loss_fn: Callable, opt_cfg: adamw.AdamWConfig):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_s, gnorm = adamw.apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+        return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def build_lm_step(cfg, shape, opt_cfg=None):
+    from repro.models.lm import transformer as T
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if shape.kind == "train":
+        return _train_wrap(
+            lambda p, b: T.loss_fn(p, cfg, b["tokens"]), opt_cfg)
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return T.prefill(params, cfg, batch["tokens"])
+        return prefill_step
+    def serve_step(params, batch):
+        return T.decode_step(params, cfg, batch["tokens"], batch["cache"],
+                             batch["cache_index"])
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
+                   opt_cfg=None, spmm_fn=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    kind = ARCHS[arch_id].gnn_kind
+    n_graphs = statics["n_graphs"]
+
+    if kind == "conv":
+        if arch_id.startswith("gcn"):
+            from repro.models.gnn import gcn
+            extra = {} if spmm_fn is None else {"spmm_fn": spmm_fn}
+
+            def loss(p, b):
+                return gcn.loss_fn(p, cfg, b["x"], b["senders"],
+                                   b["receivers"], b["edge_weight"],
+                                   b["edge_valid"], b["labels"],
+                                   b["label_mask"], **extra)
+        else:
+            from repro.models.gnn import gat
+
+            def loss(p, b):
+                return gat.loss_fn(p, cfg, b["x"], b["senders"],
+                                   b["receivers"], b["edge_valid"],
+                                   b["labels"], b["label_mask"])
+        return _train_wrap(loss, opt_cfg)
+
+    if arch_id == "schnet":
+        from repro.models.gnn import schnet
+
+        def loss(p, b):
+            return schnet.loss_fn(p, cfg, b["species"], b["pos"], b["senders"],
+                                  b["receivers"], b["edge_valid"],
+                                  b["graph_ids"], n_graphs, b["targets"])
+    else:
+        from repro.models.gnn import dimenet
+
+        def loss(p, b):
+            return dimenet.loss_fn(p, cfg, b["species"], b["pos"],
+                                   b["senders"], b["receivers"],
+                                   b["edge_valid"], b["t_in"], b["t_out"],
+                                   b["t_valid"], b["graph_ids"], n_graphs,
+                                   b["targets"])
+    return _train_wrap(loss, opt_cfg)
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def build_recsys_step(cfg, shape, opt_cfg=None):
+    from repro.models.recsys import dlrm
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if shape.kind == "train":
+        return _train_wrap(
+            lambda p, b: dlrm.loss_fn(p, cfg, b["dense"], b["sparse_ids"],
+                                      b["labels"]), opt_cfg)
+    if shape.kind == "retrieval":
+        def retrieval(params, batch):
+            return dlrm.retrieval_step(params, cfg, batch["dense"],
+                                       batch["sparse_ids"],
+                                       batch["candidates"])
+        return retrieval
+    def serve(params, batch):
+        return dlrm.forward(params, cfg, batch["dense"], batch["sparse_ids"])
+    return serve
+
+
+def build_step(arch_id: str, cfg, shape, statics, opt_cfg=None):
+    fam = ARCHS[arch_id].family
+    if fam == "lm":
+        return build_lm_step(cfg, shape, opt_cfg)
+    if fam == "gnn":
+        return build_gnn_step(arch_id, cfg, shape, statics, opt_cfg)
+    return build_recsys_step(cfg, shape, opt_cfg)
+
+
+def needs_optimizer(arch_id: str, shape) -> bool:
+    fam = ARCHS[arch_id].family
+    if fam == "gnn":
+        return True
+    return getattr(shape, "kind", "train") == "train"

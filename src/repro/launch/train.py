@@ -1,0 +1,150 @@
+"""End-to-end training driver.
+
+Runs REAL training (allocated params, real data stream, checkpointing,
+fault-tolerant loop) at any scale the local devices allow:
+
+  # ~100M-param LM, a few hundred steps (the (b) deliverable driver):
+  PYTHONPATH=src python -m repro.launch.train --preset lm100m --steps 300
+
+  # any assigned arch at reduced config (CPU-friendly smoke):
+  PYTHONPATH=src python -m repro.launch.train --arch gcn-cora --steps 50
+
+  # paper workload — GCN on a Cora-scale synthetic graph:
+  PYTHONPATH=src python -m repro.launch.train --arch gcn-cora --full-gnn
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs import shapes as S
+from repro.data import synthetic as syn
+from repro.launch import steps as steps_mod
+from repro.models.lm.transformer import LMConfig
+from repro.optim import adamw
+from repro.train import loop as train_loop
+
+LM100M = LMConfig(
+    name="lm100m", n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+    head_dim=64, d_ff=2560, vocab=32768, act="silu", qk_norm=True,
+    q_chunk=256, kv_chunk=256,
+)  # ≈ 103M params (61M layers + 2×21M embeddings)
+
+
+def _lm_setup(cfg, batch, seq, seed):
+    from repro.models.lm import transformer as T
+    params = T.init_params(jax.random.key(seed), cfg)
+    stream = syn.TokenStream(batch, seq, cfg.vocab, seed=seed)
+    shape = S.LMShape("train", "train", seq, batch)
+    step = steps_mod.build_lm_step(cfg, shape, adamw.AdamWConfig(lr=3e-4))
+    batches = ({"tokens": jnp.asarray(t)} for t in stream)
+    return params, step, batches
+
+
+def _gnn_setup(arch_id, cfg, seed, full: bool):
+    from repro.sparse.graph import make_graph, sym_norm_weights
+    s, r, x, y, c = syn.cora_like(seed)
+    n = 2708
+    if arch_id.startswith("gcn"):
+        s2, r2, w = sym_norm_weights(s, r, n)
+        g = make_graph(s2, r2, n, w)
+    else:
+        g = make_graph(s, r, n)
+    cfg = dataclasses.replace(cfg, d_in=x.shape[1], n_classes=c)
+    if arch_id.startswith("gcn"):
+        from repro.models.gnn import gcn as m
+    else:
+        from repro.models.gnn import gat as m
+    params = m.init_params(jax.random.key(seed), cfg)
+    xp = np.vstack([x, np.zeros((1, x.shape[1]), np.float32)])
+    labels = np.concatenate([y, [0]]).astype(np.int32)
+    mask = np.zeros(n + 1, bool)
+    mask[:140] = True
+    batch = {"x": jnp.asarray(xp), "senders": g.senders,
+             "receivers": g.receivers, "edge_valid": g.edge_valid,
+             "labels": jnp.asarray(labels), "label_mask": jnp.asarray(mask)}
+    if arch_id.startswith("gcn"):
+        batch["edge_weight"] = g.edge_weight
+    shape = S.GNN_SHAPES["full_graph_sm"]
+    step = steps_mod.build_gnn_step(arch_id, cfg, shape,
+                                    {"n_graphs": 1}, adamw.AdamWConfig(lr=1e-2))
+
+    def batches():
+        while True:
+            yield batch
+
+    return params, step, batches()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="assigned arch id (reduced)")
+    ap.add_argument("--preset", default=None, choices=[None, "lm100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-gnn", action="store_true",
+                    help="full (non-reduced) GNN config on Cora-scale data")
+    args = ap.parse_args()
+
+    if args.preset == "lm100m":
+        cfg = LM100M
+        params, step, batches = _lm_setup(cfg, args.batch, args.seq, args.seed)
+        from repro.models.common import count_params
+        print(f"[train] lm100m: {count_params(params)/1e6:.1f}M params")
+    else:
+        arch_id = args.arch or "gcn-cora"
+        fam = registry.ARCHS[arch_id].family
+        if fam == "lm":
+            cfg = registry.get_config(arch_id, reduced=True)
+            params, step, batches = _lm_setup(cfg, args.batch, args.seq,
+                                              args.seed)
+        elif fam == "gnn":
+            cfg = registry.get_config(arch_id, reduced=not args.full_gnn)
+            params, step, batches = _gnn_setup(arch_id, cfg, args.seed,
+                                               args.full_gnn)
+        else:
+            from repro.models.recsys import dlrm
+            cfg = registry.get_config(arch_id, reduced=True)
+            params = dlrm.init_params(jax.random.key(args.seed), cfg)
+            shape = S.RECSYS_SHAPES["train_batch"]
+            step = steps_mod.build_recsys_step(
+                cfg, shape, adamw.AdamWConfig(lr=1e-3))
+
+            def gen():
+                i = 0
+                while True:
+                    d, ids, y = syn.dlrm_batch(args.batch, cfg.n_dense,
+                                               cfg.vocab_sizes, seed=i)
+                    yield {"dense": jnp.asarray(d),
+                           "sparse_ids": jnp.asarray(ids),
+                           "labels": jnp.asarray(y)}
+                    i += 1
+            batches = gen()
+
+    opt_state = adamw.init_state(params)
+    jit_step = jax.jit(step, donate_argnums=(0, 1))
+    state = train_loop.TrainState(params=params, opt_state=opt_state)
+    cfg_loop = train_loop.TrainLoopConfig(
+        n_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir)
+    t0 = time.time()
+    state, hist = train_loop.run(state, jit_step, batches, cfg_loop)
+    dt = time.time() - t0
+    print(f"[train] {state.step} steps in {dt:.1f}s; "
+          f"loss {hist['loss'][0]:.4f} → {hist['loss'][-1]:.4f}; "
+          f"stragglers={hist['stragglers']} retries={hist['retries']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

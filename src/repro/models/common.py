@@ -1,0 +1,57 @@
+"""Shared NN building blocks (framework-free param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def mlp_init(key, dims: Sequence[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype=dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params, x: Array, act: Callable = jax.nn.silu,
+              final_act: bool = False) -> Array:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def shifted_softplus(x: Array) -> Array:
+    """SchNet's ssp(x) = ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - math.log(2.0)
+
+
+def count_params(tree) -> int:
+    return sum(p.size for p in jax.tree.leaves(tree))

@@ -1,0 +1,106 @@
+"""GAT (Veličković et al.) — SDDMM (edge scores) → segment-softmax → SpMM.
+
+The attention-score stage is exactly the paper's multiply stage with a
+different reducer: NeuraCore produces per-edge partial products (here score
+logits), NeuraMem merges per destination row (here a max/sum pair for the
+softmax) — the decoupled structure carries over unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment_ops import segment_softmax
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    param_dtype: str = "float32"
+    dp_axes: tuple = ()
+
+
+def _pin(x, cfg: "GATConfig"):
+    """Node/edge-major tensors stay dp-sharded (see gcn._pin_nodes)."""
+    if not cfg.dp_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(cfg.dp_axes, *([None] * (x.ndim - 1))))
+
+
+def init_params(key, cfg: GATConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {}
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        params[f"layer{i}"] = {
+            "w": jax.random.normal(k1, (d_in, heads, d_out), dt)
+            * (1.0 / jnp.sqrt(d_in)),
+            "a_src": jax.random.normal(k2, (heads, d_out), dt) * 0.1,
+            "a_dst": jax.random.normal(k3, (heads, d_out), dt) * 0.1,
+            "b": jnp.zeros((heads * d_out,), dt),
+        }
+        d_in = heads * d_out
+    return params
+
+
+def gat_layer(p, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
+              edge_valid: Array, average_heads: bool) -> Array:
+    n = x.shape[0]
+    h = _pin(jnp.einsum("nd,dhf->nhf", x, p["w"].astype(x.dtype)), cfg)
+    # SDDMM stage: per-edge attention logits
+    e_src = (h * p["a_src"].astype(x.dtype)).sum(-1)           # (N, H)
+    e_dst = (h * p["a_dst"].astype(x.dtype)).sum(-1)
+    logits = jax.nn.leaky_relu(
+        jnp.take(e_src, senders, axis=0) + jnp.take(e_dst, receivers, axis=0),
+        cfg.negative_slope,
+    ).astype(jnp.float32)                                      # (E, H)
+    logits = _pin(jnp.where(edge_valid[:, None], logits, -1e30), cfg)
+    alpha = segment_softmax(logits, receivers, n).astype(x.dtype)
+    alpha = _pin(jnp.where(edge_valid[:, None], alpha, 0), cfg)
+    # multiply stage: weighted messages; accumulate stage: segment sum
+    msg = _pin(jnp.take(h, senders, axis=0) * alpha[..., None], cfg)
+    agg = _pin(jax.ops.segment_sum(msg, receivers, num_segments=n), cfg)
+    if average_heads:
+        out = agg.mean(axis=1)
+    else:
+        out = agg.reshape(n, -1)
+        out = out + p["b"].astype(x.dtype)
+    return _pin(out, cfg)
+
+
+def forward(params, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
+            edge_valid: Array) -> Array:
+    h = x
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        h = gat_layer(params[f"layer{i}"], cfg, h, senders, receivers,
+                      edge_valid, average_heads=last)
+        if not last:
+            h = jax.nn.elu(h)
+    return h
+
+
+def loss_fn(params, cfg: GATConfig, x, senders, receivers, edge_valid,
+            labels, label_mask):
+    logits = forward(params, cfg, x, senders, receivers, edge_valid)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    m = label_mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)

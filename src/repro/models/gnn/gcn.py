@@ -1,0 +1,90 @@
+"""GCN (Kipf & Welling) on the decoupled SpMM core — the paper's own GNN
+workload (NeuraChip §5.4 evaluates a GCN layer; A.3.3 uses Cora/Tile-16).
+
+``spmm_fn`` is injected so the same model runs on the local decoupled SpMM,
+the chunked rolling-eviction SpMM, the DRHM-sharded distributed SpMM, or the
+Pallas Gustavson kernel — the model is agnostic (paper C1 as a framework
+property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spgemm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    param_dtype: str = "float32"
+    # node-dim sharding constraint axes (empty ⇒ no constraints)
+    dp_axes: tuple = ()
+
+
+def _pin_nodes(x, cfg: GCNConfig):
+    """Keep node-major tensors sharded over dp — without this GSPMD
+    replicates post-scatter activations (256× redundant compute on
+    ogb_products; §Perf gcn iteration 1)."""
+    if not cfg.dp_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(cfg.dp_axes, *([None] * (x.ndim - 1))))
+
+
+def default_spmm(rows, cols, vals, x, n_rows, valid):
+    return spgemm.spmm_masked(rows, cols, vals, x, n_rows, valid)
+
+
+def init_params(key, cfg: GCNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        f"layer{i}": {
+            "w": jax.random.normal(keys[i], (dims[i], dims[i + 1]), dt)
+            * (1.0 / jnp.sqrt(dims[i])),
+            "b": jnp.zeros((dims[i + 1],), dt),
+        }
+        for i in range(cfg.n_layers)
+    }
+
+
+def forward(params, cfg: GCNConfig, x: Array, senders: Array, receivers: Array,
+            edge_weight: Optional[Array], edge_valid: Array,
+            spmm_fn: Callable = default_spmm) -> Array:
+    """x: (N_pad, d_in) — returns logits (N_pad, n_classes).
+
+    Aggregation direction: receivers accumulate sender features (rows =
+    receivers, cols = senders) — one Gustavson SpMM per layer.
+    """
+    n = x.shape[0]
+    h = x
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        h = _pin_nodes(h @ p["w"].astype(h.dtype), cfg)   # combination (dense)
+        h = spmm_fn(receivers, senders, edge_weight, h, n, edge_valid)  # aggregation
+        h = _pin_nodes(h, cfg) + p["b"].astype(h.dtype)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return _pin_nodes(h, cfg)
+
+
+def loss_fn(params, cfg: GCNConfig, x, senders, receivers, edge_weight,
+            edge_valid, labels, label_mask, spmm_fn: Callable = default_spmm):
+    logits = forward(params, cfg, x, senders, receivers, edge_weight,
+                     edge_valid, spmm_fn).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    m = label_mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)

@@ -1,0 +1,130 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — RM2-class config.
+
+The embedding lookup IS an SpMM: EmbeddingBag(ids) ≡ S · T with S the one-hot
+bag selection matrix — so the hot path runs on the same decoupled
+multiply/accumulate core as the GNN aggregation (``jnp.take`` gather +
+``segment_sum`` reduce; JAX has no native EmbeddingBag).  All 26 tables are
+fused into one (total_vocab, D) table with per-field offsets; at pod scale the
+table rows are DRHM-sharded over the model axis (paper C2 as hot-row
+balancing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import mlp_apply, mlp_init
+
+Array = jax.Array
+
+
+# RM2-scale per-field vocab sizes (Criteo-like mix of huge and small tables).
+DEFAULT_VOCABS: Tuple[int, ...] = (
+    9980333, 36084, 17217, 7378, 20134, 3, 7112, 1442, 61, 9758201, 1333352,
+    313829, 10, 2208, 11156, 122, 4, 970, 14, 9994222, 7267859, 9946608,
+    415421, 12420, 101, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp_hidden: Tuple[int, ...] = (512, 512, 256, 1)
+    vocab_sizes: Tuple[int, ...] = DEFAULT_VOCABS
+    multi_hot: int = 1
+    param_dtype: str = "float32"
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Fused-table rows padded to a 2048 multiple so the DRHM row-shard
+        over any production mesh axis divides exactly."""
+        return ((self.total_vocab + 2047) // 2048) * 2048
+
+    @property
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(
+            np.int32)
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_mlp_in(self) -> int:
+        return self.n_interactions + self.bot_mlp[-1]
+
+
+def init_params(key, cfg: DLRMConfig):
+    assert cfg.bot_mlp[-1] == cfg.embed_dim, \
+        "bottom-MLP output width must equal embed_dim (DLRM dot interaction)"
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "table": jax.random.normal(k1, (cfg.padded_vocab, cfg.embed_dim), dt)
+        * 0.01,
+        "bot": mlp_init(k2, list(cfg.bot_mlp), dt),
+        "top": mlp_init(k3, [cfg.top_mlp_in] + list(cfg.top_mlp_hidden), dt),
+    }
+
+
+def embedding_bag(table: Array, ids: Array, field_offsets: Array) -> Array:
+    """ids: (B, F, M) local ids → (B, F, D) sum-bags.
+
+    take + segment-free sum over the bag axis (M small & static), after
+    offsetting each field into the fused table.
+    """
+    global_ids = ids + field_offsets[None, :, None]
+    emb = jnp.take(table, global_ids.reshape(-1), axis=0)
+    b, f, m = ids.shape
+    return emb.reshape(b, f, m, -1).sum(axis=2)
+
+
+def interact(dense_out: Array, emb: Array) -> Array:
+    """Dot-product feature interaction (DLRM 'dot'): upper-triangle of the
+    (F+1)×(F+1) Gram matrix of field vectors."""
+    b = dense_out.shape[0]
+    z = jnp.concatenate([dense_out[:, None, :], emb], axis=1)  # (B, F+1, D)
+    gram = jnp.einsum("bfd,bgd->bfg", z, z)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return gram[:, iu, ju]                                     # (B, F(F-1)/2)
+
+
+def forward(params, cfg: DLRMConfig, dense: Array, sparse_ids: Array) -> Array:
+    """dense (B, 13), sparse_ids (B, 26, M) → logits (B,)."""
+    offs = jnp.asarray(cfg.field_offsets)
+    x = mlp_apply(params["bot"], dense, act=jax.nn.relu, final_act=True)
+    emb = embedding_bag(params["table"], sparse_ids, offs)
+    feats = jnp.concatenate([interact(x, emb), x], axis=-1)
+    return mlp_apply(params["top"], feats, act=jax.nn.relu)[:, 0]
+
+
+def loss_fn(params, cfg: DLRMConfig, dense, sparse_ids, labels):
+    logits = forward(params, cfg, dense, sparse_ids).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_step(params, cfg: DLRMConfig, dense: Array, sparse_ids: Array,
+                   candidates: Array) -> Array:
+    """Score one query against (C, D) candidate embeddings (retrieval_cand):
+    batched dot, not a loop."""
+    offs = jnp.asarray(cfg.field_offsets)
+    x = mlp_apply(params["bot"], dense, act=jax.nn.relu, final_act=True)
+    emb = embedding_bag(params["table"], sparse_ids, offs)
+    q = x + emb.mean(axis=1)                                   # (B, D) query vec
+    return jnp.einsum("bd,cd->bc", q, candidates)              # (B, C) scores

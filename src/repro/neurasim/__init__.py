@@ -1,0 +1,1 @@
+from repro.neurasim import datasets, machine, model  # noqa: F401

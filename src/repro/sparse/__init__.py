@@ -1,0 +1,1 @@
+from repro.sparse import graph, segment_ops  # noqa: F401

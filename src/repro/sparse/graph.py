@@ -1,0 +1,148 @@
+"""Graph containers and host-side format conversions.
+
+The device-side representation is always a padded COO edge list (senders,
+receivers, optional values, valid mask) — the only layout segment reductions
+need.  Host-side we additionally keep CSR for the neighbor sampler and the
+blocked-ELL packer used by the Gustavson Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class Graph(NamedTuple):
+    """Padded device-side COO graph.
+
+    senders/receivers: (E_pad,) int32.  Padding edges have both set to
+    ``n_nodes`` (a ghost row) and ``edge_valid == False``.
+    """
+
+    senders: Array
+    receivers: Array
+    n_nodes: int          # static (python int) — number of real nodes
+    edge_valid: Array     # (E_pad,) bool
+    edge_weight: Optional[Array] = None  # (E_pad,) float or None
+
+
+def pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
+    if x.shape[0] == size:
+        return x
+    pad = np.full((size - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_graph(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
+               edge_weight: Optional[np.ndarray] = None,
+               pad_multiple: int = 128) -> Graph:
+    """Build a padded Graph from raw COO arrays (host-side)."""
+    e = senders.shape[0]
+    e_pad = round_up(max(e, 1), pad_multiple)
+    valid = np.zeros((e_pad,), dtype=bool)
+    valid[:e] = True
+    s = pad_to(senders.astype(np.int32), e_pad, n_nodes)
+    r = pad_to(receivers.astype(np.int32), e_pad, n_nodes)
+    w = None
+    if edge_weight is not None:
+        w = pad_to(edge_weight.astype(np.float32), e_pad, 0.0)
+    return Graph(
+        senders=jnp.asarray(s),
+        receivers=jnp.asarray(r),
+        n_nodes=n_nodes,
+        edge_valid=jnp.asarray(valid),
+        edge_weight=None if w is None else jnp.asarray(w),
+    )
+
+
+def coo_to_csr(senders: np.ndarray, receivers: np.ndarray, n_nodes: int):
+    """Host-side CSR build (rows = receivers — aggregation viewpoint)."""
+    order = np.argsort(receivers, kind="stable")
+    s_sorted = senders[order]
+    r_sorted = receivers[order]
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.add.at(indptr, r_sorted + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, s_sorted.astype(np.int32), order
+
+
+def sym_norm_weights(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
+                     add_self_loops: bool = True):
+    """GCN symmetric normalization  D^-1/2 (A+I) D^-1/2  — host-side."""
+    if add_self_loops:
+        loops = np.arange(n_nodes, dtype=senders.dtype)
+        senders = np.concatenate([senders, loops])
+        receivers = np.concatenate([receivers, loops])
+    deg = np.zeros(n_nodes, dtype=np.float64)
+    np.add.at(deg, receivers, 1.0)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    w = dinv[senders] * dinv[receivers]
+    return senders, receivers, w.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedELL:
+    """Blocked-ELL packing of a sparse matrix for the Gustavson Pallas kernel.
+
+    Rows are grouped into blocks of ``block_rows``; each block stores a padded
+    nnz list (cols, vals, local row index within the block) of length
+    ``nnz_pad`` (the max nnz over blocks, rounded to ``nnz_multiple``).
+    ``remaining`` is the per-block rolling-eviction counter: the number of real
+    partial products the block must absorb before its accumulator tile can be
+    evicted to HBM.
+    """
+
+    cols: np.ndarray       # (n_blocks, nnz_pad) int32 — column index per edge
+    row_local: np.ndarray  # (n_blocks, nnz_pad) int32 — row within block
+    vals: np.ndarray       # (n_blocks, nnz_pad) float32 (0 for padding)
+    remaining: np.ndarray  # (n_blocks,) int32 — eviction counters
+    n_rows: int
+    n_cols: int
+    block_rows: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.cols.shape[1]
+
+
+def pack_blocked_ell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                     n_rows: int, n_cols: int, block_rows: int = 8,
+                     nnz_multiple: int = 128) -> BlockedELL:
+    """Pack COO (rows, cols, vals) into BlockedELL (host-side, done once)."""
+    n_blocks = round_up(n_rows, block_rows) // block_rows
+    order = np.argsort(rows, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    blk = rows // block_rows
+    counts = np.zeros(n_blocks, dtype=np.int64)
+    np.add.at(counts, blk, 1)
+    nnz_pad = int(round_up(max(int(counts.max(initial=1)), 1), nnz_multiple))
+    out_cols = np.zeros((n_blocks, nnz_pad), dtype=np.int32)
+    out_rloc = np.zeros((n_blocks, nnz_pad), dtype=np.int32)
+    out_vals = np.zeros((n_blocks, nnz_pad), dtype=np.float32)
+    # bucket-fill
+    starts = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(n_blocks):
+        lo, hi = starts[b], starts[b + 1]
+        k = hi - lo
+        out_cols[b, :k] = cols[lo:hi]
+        out_rloc[b, :k] = rows[lo:hi] - b * block_rows
+        out_vals[b, :k] = vals[lo:hi]
+    return BlockedELL(
+        cols=out_cols, row_local=out_rloc, vals=out_vals,
+        remaining=counts.astype(np.int32), n_rows=n_rows, n_cols=n_cols,
+        block_rows=block_rows,
+    )

@@ -1,0 +1,92 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for ``minibatch_lg``.
+
+Host-side (numpy) — this is data-pipeline work, exactly where production
+systems (DGL/PyG/GraphLearn) run it.  Emits *fixed-shape* padded subgraph
+tensors so the jitted train step is shape-static:
+
+  seeds:        (B,)                          seed node ids
+  layer k edges (B·f1·…·fk, 2) padded         (src, dst-position) pairs where
+                                              dst-position indexes the previous
+                                              layer's node table.
+
+The flattened form below returns one node table + per-hop edge lists that the
+GNN models consume through the same decoupled SpMM primitive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledSubgraph:
+    """Fixed-shape k-hop sampled subgraph.
+
+    node_ids: (n_nodes_pad,) global ids of all nodes in the block (seeds
+              first), padding = -1 → mapped to a ghost feature row.
+    hops: per hop h, (senders_local, receivers_local, valid) index arrays of
+          *static* length B·Πf — senders/receivers index into node_ids.
+    n_seeds: static seed count.
+    """
+
+    node_ids: np.ndarray
+    hop_senders: List[np.ndarray]
+    hop_receivers: List[np.ndarray]
+    hop_valid: List[np.ndarray]
+    n_seeds: int
+
+
+def budget(n_seeds: int, fanouts: Sequence[int]) -> List[int]:
+    """Static per-hop edge budgets: [B·f1, B·f1·f2, ...]."""
+    out, cur = [], n_seeds
+    for f in fanouts:
+        cur *= f
+        out.append(cur)
+    return out
+
+
+def node_budget(n_seeds: int, fanouts: Sequence[int]) -> int:
+    """Static node-table size: seeds + all sampled endpoints."""
+    return n_seeds + sum(budget(n_seeds, fanouts))
+
+
+def sample_subgraph(indptr: np.ndarray, indices: np.ndarray,
+                    seeds: np.ndarray, fanouts: Sequence[int],
+                    rng: np.random.Generator) -> SampledSubgraph:
+    """Uniform with-replacement fanout sampling (fixed shapes, padded).
+
+    indptr/indices: CSR of the (reverse) adjacency — indices[j] lists the
+    in-neighbors whose messages node j aggregates.
+    """
+    n_seeds = seeds.shape[0]
+    frontier = seeds.astype(np.int64)          # nodes whose neighbors we sample
+    table = [seeds.astype(np.int64)]
+    hop_s, hop_r, hop_v = [], [], []
+    base = 0                                    # offset of frontier in table
+    next_base = n_seeds
+    for f in fanouts:
+        nf = frontier.shape[0]
+        deg = indptr[frontier + 1] - indptr[frontier]
+        has_nbr = deg > 0
+        # sample f neighbors (with replacement) per frontier node
+        r = rng.integers(0, np.maximum(deg, 1)[:, None],
+                         size=(nf, f))
+        nbr = indices[indptr[frontier][:, None] + r]           # (nf, f)
+        valid = np.broadcast_to(has_nbr[:, None], (nf, f)).copy()
+        nbr = np.where(valid, nbr, -1)
+        # receivers are positions of the frontier nodes in the table
+        recv = np.broadcast_to((base + np.arange(nf))[:, None], (nf, f))
+        send = next_base + np.arange(nf * f).reshape(nf, f)    # fresh slots
+        table.append(nbr.reshape(-1))
+        hop_s.append(send.reshape(-1).astype(np.int32))
+        hop_r.append(recv.reshape(-1).copy().astype(np.int32))
+        hop_v.append(valid.reshape(-1))
+        frontier = np.where(valid, nbr, 0).reshape(-1)
+        base = next_base
+        next_base += nf * f
+    node_ids = np.concatenate(table)
+    return SampledSubgraph(node_ids=node_ids, hop_senders=hop_s,
+                           hop_receivers=hop_r, hop_valid=hop_v,
+                           n_seeds=n_seeds)

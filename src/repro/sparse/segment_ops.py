@@ -1,0 +1,55 @@
+"""Segment reduction primitives.
+
+JAX has no CSR/CSC sparse support (BCOO only), so every sparse operation in this
+framework is expressed over an explicit edge list (COO) plus ``jax.ops.segment_*``
+reductions.  These wrappers pin down the conventions used everywhere else:
+
+* ``segment_ids`` are int32, ``num_segments`` is static,
+* invalid (padding) entries carry ``segment_id == num_segments`` and are dropped
+  by passing ``num_segments`` buckets and slicing, OR carry a 0 value — both
+  patterns appear; helpers here make the first one explicit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def segment_sum(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments)
+    cnt = jnp.maximum(cnt, 1)
+    return tot / cnt.reshape((-1,) + (1,) * (data.ndim - 1))
+
+
+def segment_softmax(logits: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Numerically-stable softmax over variable-length segments (GAT edge softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    # Empty segments produce -inf max; make gather safe.
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    denom = segment_sum(expd, segment_ids, num_segments)
+    denom = jnp.maximum(denom, 1e-30)
+    return expd / denom[segment_ids]
+
+
+def pad_segment_drop(data: Array, valid: Array) -> Array:
+    """Zero out padding lanes so they contribute nothing to a downstream sum."""
+    return jnp.where(valid.reshape((-1,) + (1,) * (data.ndim - 1)), data, 0)
+
+
+def segment_normalize(x: Array, seg_counts: Array, power: float = 1.0) -> Array:
+    """Divide row i by count_i**power (GCN-style degree normalization)."""
+    scale = jnp.where(seg_counts > 0, seg_counts.astype(x.dtype) ** power, 1.0)
+    return x / scale.reshape((-1,) + (1,) * (x.ndim - 1))

@@ -1,0 +1,83 @@
+"""Smoke + training tests for the beyond-assignment GNNs (GraphSAGE, GIN),
+including GraphSAGE on its native fanout-sampled minibatch path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import gin, sage
+from repro.sparse import sampler
+from repro.sparse.graph import coo_to_csr
+
+
+def _finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(tree))
+
+
+def test_sage_on_sampled_minibatch():
+    rng = np.random.default_rng(0)
+    n, e, d = 500, 4000, 16
+    s = rng.integers(0, n, e)
+    r = rng.integers(0, n, e)
+    feats = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.integers(0, 5, n).astype(np.int32)
+    indptr, indices, _ = coo_to_csr(s, r, n)
+
+    seeds = rng.integers(0, n, 16)
+    sub = sampler.sample_subgraph(indptr, indices, seeds, (5, 3), rng)
+    ids = np.where(sub.node_ids >= 0, sub.node_ids, 0)
+    x = feats[ids]
+    senders = np.concatenate(sub.hop_senders)
+    receivers = np.concatenate(sub.hop_receivers)
+    valid = np.concatenate(sub.hop_valid)
+    labels = np.zeros(len(ids), np.int32)
+    labels[:16] = y[seeds]
+    mask = np.zeros(len(ids), bool)
+    mask[:16] = True
+
+    cfg = sage.SAGEConfig(d_in=d, d_hidden=8, n_classes=5)
+    params = sage.init_params(jax.random.key(0), cfg)
+    loss, grads = jax.value_and_grad(sage.loss_fn)(
+        params, cfg, jnp.asarray(x), jnp.asarray(senders),
+        jnp.asarray(receivers), jnp.asarray(valid), jnp.asarray(labels),
+        jnp.asarray(mask))
+    assert np.isfinite(float(loss))
+    assert _finite(grads)
+
+
+def test_gin_graph_classification_learns():
+    rng = np.random.default_rng(1)
+    batch, n, e = 16, 10, 30
+    # two classes distinguished by feature mean — learnable signal
+    labels = rng.integers(0, 2, batch).astype(np.int32)
+    xs, ss, rs, gid = [], [], [], []
+    for b in range(batch):
+        xs.append(rng.normal(size=(n, 8)).astype(np.float32)
+                  + labels[b] * 0.75)
+        ss.append(rng.integers(0, n, e) + b * n)
+        rs.append(rng.integers(0, n, e) + b * n)
+        gid.append(np.full(n, b))
+    x = jnp.asarray(np.concatenate(xs))
+    senders = jnp.asarray(np.concatenate(ss))
+    receivers = jnp.asarray(np.concatenate(rs))
+    valid = jnp.ones(batch * e, bool)
+    graph_ids = jnp.asarray(np.concatenate(gid))
+
+    cfg = gin.GINConfig(d_in=8, d_hidden=16, n_classes=2, n_layers=2)
+    params = gin.init_params(jax.random.key(0), cfg)
+    from repro.optim import adamw
+    opt = adamw.init_state(params)
+    ocfg = adamw.AdamWConfig(lr=5e-3)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(gin.loss_fn)(
+            p, cfg, x, senders, receivers, valid, graph_ids, batch,
+            jnp.asarray(labels))
+        p, o, _ = adamw.apply_updates(p, g, o, ocfg)
+        return p, o, loss
+
+    losses = []
+    for _ in range(40):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0]

@@ -1,0 +1,62 @@
+"""While-aware HLO cost model: trip-count multiplication on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_costs
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied():
+    """20-iteration scan of a 128×128 matmul: ≈ 20 · 2·128³ flops."""
+    n, iters = 128, 20
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def fn(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=iters)
+        return out
+
+    txt = _compiled_text(fn, x, w)
+    flops, byts, coll = hlo_costs.corrected_costs(txt)
+    expect = 2.0 * n * n * n * iters
+    assert 0.9 * expect < flops < 1.3 * expect, (flops, expect)
+
+
+def test_flat_matmul_flops():
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    txt = _compiled_text(lambda a, b: a @ b, a, b)
+    flops, _, _ = hlo_costs.corrected_costs(txt)
+    expect = 2 * 64 * 256 * 32
+    assert 0.99 * expect < flops < 1.01 * expect
+
+
+def test_bytes_scale_with_scan_length():
+    n = 256
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def make(iters):
+        def fn(x):
+            def body(c, _):
+                return jnp.tanh(c) * 1.0001, None
+            out, _ = jax.lax.scan(body, x, None, length=iters)
+            return out
+        return fn
+
+    _, b10, _ = hlo_costs.corrected_costs(_compiled_text(make(10), x))
+    _, b40, _ = hlo_costs.corrected_costs(_compiled_text(make(40), x))
+    assert 2.5 < b40 / b10 < 4.5
+
+
+def test_shape_bytes():
+    assert hlo_costs._shape_bytes("f32[4,8]{1,0}") == 128
+    assert hlo_costs._shape_bytes("bf16[10]") == 20
+    assert hlo_costs._shape_bytes("(f32[2,2], s32[3])") == 28
+    assert hlo_costs._shape_bytes("pred[7]") == 7

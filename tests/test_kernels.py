@@ -1,0 +1,101 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import mha_causal
+from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_blocked_ell
+from repro.kernels.gustavson_spmm.ref import spmm_blocked_ell_ref
+from repro.kernels.sddmm.ops import edge_scores
+from repro.kernels.sddmm.ref import sddmm_ref
+from repro.sparse.graph import pack_blocked_ell
+
+
+@pytest.mark.parametrize("n,e,d,block_rows", [
+    (32, 120, 8, 8), (64, 400, 128, 8), (100, 777, 33, 16), (16, 16, 256, 8),
+])
+def test_gustavson_spmm_shapes(n, e, d, block_rows):
+    rng = np.random.default_rng(e)
+    rows = rng.integers(0, n, e)
+    cols = rng.integers(0, n, e)
+    vals = rng.normal(size=e).astype(np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    ell = pack_blocked_ell(rows, cols, vals, n, n, block_rows=block_rows,
+                           nnz_multiple=32)
+    args = (jnp.asarray(ell.cols), jnp.asarray(ell.row_local),
+            jnp.asarray(ell.vals), jnp.asarray(ell.remaining), jnp.asarray(x))
+    out = spmm_blocked_ell(*args, block_rows=block_rows)
+    ref = spmm_blocked_ell_ref(*args, block_rows)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gustavson_empty_rows():
+    """Rolling-eviction counters: blocks with zero nnz evict zeros."""
+    n, d = 32, 16
+    rows = np.array([0, 0, 1])
+    cols = np.array([3, 4, 5])
+    vals = np.ones(3, np.float32)
+    x = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+    ell = pack_blocked_ell(rows, cols, vals, n, n, block_rows=8,
+                           nnz_multiple=32)
+    out = spmm_blocked_ell(jnp.asarray(ell.cols), jnp.asarray(ell.row_local),
+                           jnp.asarray(ell.vals), jnp.asarray(ell.remaining),
+                           jnp.asarray(x), block_rows=8)
+    assert float(jnp.abs(out[8:]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(out[0]), x[3] + x[4], rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,e,d", [(40, 256, 32), (17, 100, 64), (8, 64, 128)])
+def test_sddmm_shapes(n, e, d):
+    rng = np.random.default_rng(d)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    out = edge_scores(src, dst, x, y, edge_block=64)
+    ref = sddmm_ref(src, dst, x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,f,m,v,d", [(8, 4, 1, 50, 16), (16, 26, 1, 200, 64),
+                                       (8, 3, 4, 77, 32)])
+def test_embedding_bag_shapes(b, f, m, v, d):
+    rng = np.random.default_rng(b + f)
+    ids = jnp.asarray(rng.integers(0, v, (b, f, m)), jnp.int32)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    out = embedding_bag(ids, table, batch_tile=4)
+    ref = embedding_bag_ref(ids, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,bq,bk", [
+    (2, 128, 4, 2, 32, 32, 32), (1, 256, 2, 2, 64, 64, 128),
+    (3, 64, 8, 1, 16, 16, 16),
+])
+def test_flash_attention_shapes(b, s, h, kv, hd, bq, bk):
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    out = mha_causal(q, k, v, block_q=bq, block_k=bk)
+    ref = mha_causal(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.bfloat16)
+    out = mha_causal(q, k, v, block_q=32, block_k=32)
+    ref = mha_causal(jnp.float32(q), jnp.float32(k), jnp.float32(v),
+                     use_kernel=False)
+    np.testing.assert_allclose(np.float32(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,71 @@
+"""MoE dispatch invariants (capacity, combine weighting, DRHM-ish balance)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.lm import transformer as T
+
+
+def _cfg(**kw):
+    base = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                d_ff=64, vocab=128, n_experts=4, top_k=2, moe_layer_period=1,
+                q_chunk=8, kv_chunk=8)
+    base.update(kw)
+    return T.LMConfig(**base)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 2), st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_moe_output_finite_and_shaped(seed, top_k, n_experts):
+    cfg = _cfg(top_k=top_k, n_experts=n_experts)
+    rng = np.random.default_rng(seed)
+    p = T._moe_mlp_init(jax.random.key(seed), cfg, 1)
+    p = jax.tree.map(lambda x: x[0], p)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)).astype(np.float32))
+    cap = T.moe_capacity(cfg, 32)
+    y = T.moe_mlp(p, cfg, x, cap)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_huge_capacity_equals_dense_expert_mix():
+    """With capacity ≥ T·k nothing drops: output = Σ p_e · FFN_e(x)."""
+    cfg = _cfg(top_k=4, n_experts=4)          # top_k = E ⇒ all experts
+    rng = np.random.default_rng(0)
+    p = T._moe_mlp_init(jax.random.key(0), cfg, 1)
+    p = jax.tree.map(lambda x: x[0], p)
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)).astype(np.float32))
+    y = T.moe_mlp(p, cfg, x, capacity=1024)
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    ref = jnp.zeros_like(xt)
+    for e in range(4):
+        h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wu"][e])
+        ref = ref + probs[:, e:e + 1] * (h @ p["wd"][e])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_drop_bounds_buffer():
+    """No expert receives more than `capacity` tokens (overflow dropped)."""
+    cfg = _cfg(top_k=1, n_experts=2)
+    rng = np.random.default_rng(1)
+    p = T._moe_mlp_init(jax.random.key(1), cfg, 1)
+    p = jax.tree.map(lambda x: x[0], p)
+    # capacity 8 with 64 tokens: must not error and must stay finite
+    x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)).astype(np.float32))
+    y = T.moe_mlp(p, cfg, x, capacity=8)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_capacity_rounding():
+    cfg = _cfg(top_k=2, n_experts=4, capacity_factor=1.25)
+    c = T.moe_capacity(cfg, 1024)
+    assert c % 128 == 0
+    assert c >= 1024 * 2 / 4 * 1.25

@@ -1,0 +1,59 @@
+"""Neighbor sampler: static shapes, valid endpoints, determinism."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sparse import sampler
+from repro.sparse.graph import coo_to_csr
+
+
+def _graph(n=200, e=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n, e)
+    r = rng.integers(0, n, e)
+    indptr, indices, _ = coo_to_csr(s, r, n)
+    return indptr, indices, n
+
+
+@given(st.integers(1, 16), st.lists(st.integers(1, 6), min_size=1,
+                                    max_size=3), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_static_shapes(b, fanouts, seed):
+    indptr, indices, n = _graph()
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, n, b)
+    sub = sampler.sample_subgraph(indptr, indices, seeds, fanouts, rng)
+    assert sub.node_ids.shape[0] == sampler.node_budget(b, fanouts)
+    for h, f_budget in zip(range(len(fanouts)),
+                           sampler.budget(b, fanouts)):
+        assert sub.hop_senders[h].shape[0] == f_budget
+        assert sub.hop_receivers[h].shape[0] == f_budget
+        assert sub.hop_valid[h].shape[0] == f_budget
+        # senders/receivers index INTO the node table
+        assert sub.hop_senders[h].max() < sub.node_ids.shape[0]
+        assert sub.hop_receivers[h].max() < sub.node_ids.shape[0]
+
+
+def test_sampled_edges_exist_in_graph():
+    indptr, indices, n = _graph()
+    rng = np.random.default_rng(7)
+    seeds = rng.integers(0, n, 8)
+    sub = sampler.sample_subgraph(indptr, indices, seeds, (5, 3), rng)
+    for h in range(2):
+        v = sub.hop_valid[h]
+        src_global = sub.node_ids[sub.hop_senders[h][v]]
+        dst_global = sub.node_ids[sub.hop_receivers[h][v]]
+        for sg, dg in zip(src_global[:50], dst_global[:50]):
+            nbrs = indices[indptr[dg]:indptr[dg + 1]]
+            assert sg in nbrs
+
+
+def test_deterministic():
+    indptr, indices, n = _graph()
+    seeds = np.arange(4)
+    a = sampler.sample_subgraph(indptr, indices, seeds, (4, 2),
+                                np.random.default_rng(3))
+    b = sampler.sample_subgraph(indptr, indices, seeds, (4, 2),
+                                np.random.default_rng(3))
+    assert np.array_equal(a.node_ids, b.node_ids)

@@ -1,0 +1,66 @@
+"""Static validation of the sharding strategy registry: every ARGUMENT
+sharding divides its dimension on both production meshes, for all 40 cells —
+the cheap host-side version of the dry-run's divisibility contract.
+
+(Intermediate/activation shardings may pad unevenly; argument shardings in
+jax.jit must divide exactly, which is what these tests pin.)
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch import sharding
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class FakeMesh:
+    def __init__(self, multi_pod):
+        self.axis_names = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+        self.shape = dict(zip(self.axis_names,
+                              (2, 16, 16) if multi_pod else (16, 16)))
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _check_divisible(tree, pspecs, mesh, ctx):
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves) == len(specs), ctx
+    for leaf, spec in zip(leaves, specs):
+        for dim, entry in enumerate(spec):
+            size = _axis_size(mesh, entry)
+            assert leaf.shape[dim] % size == 0, \
+                f"{ctx}: shape {leaf.shape} dim {dim} not divisible by {size}"
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("arch_id", sorted(registry.ARCHS))
+def test_param_and_input_shardings_divide(arch_id, multi_pod):
+    from repro.launch.dryrun import param_tree_for
+    mesh = FakeMesh(multi_pod)
+    for shape_name in registry.shapes_for(arch_id):
+        shape = registry.shapes_for(arch_id)[shape_name]
+        cfg = registry.get_config(arch_id, shape=shape)
+        specs, _ = registry.input_specs(arch_id, shape_name)
+        params = param_tree_for(arch_id, cfg)
+        p_pspec = sharding.param_pspecs(arch_id, params, mesh)
+        in_pspec = sharding.input_pspecs(arch_id, shape, specs, mesh)
+        _check_divisible(params, p_pspec, mesh,
+                         f"{arch_id}/{shape_name}/params")
+        _check_divisible(specs, in_pspec, mesh,
+                         f"{arch_id}/{shape_name}/inputs")

@@ -1,0 +1,105 @@
+"""End-to-end system behaviour: training convergence, checkpoint/restart,
+failure injection + recovery, straggler accounting — the fault-tolerance
+contract of the training runtime."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import synthetic as syn
+from repro.optim import adamw
+from repro.train import loop as train_loop
+
+
+def _gcn_job(tmp_path, n_steps, **kw):
+    from repro.launch.train import _gnn_setup
+    cfg = registry.get_config("gcn-cora", reduced=False)
+    params, step, batches = _gnn_setup("gcn-cora", cfg, 0, full=True)
+    state = train_loop.TrainState(params=params,
+                                 opt_state=adamw.init_state(params))
+    loop_cfg = train_loop.TrainLoopConfig(
+        n_steps=n_steps, ckpt_every=5, ckpt_dir=str(tmp_path), log_every=1000)
+    return state, jax.jit(step), batches, loop_cfg
+
+
+def test_training_converges(tmp_path):
+    state, step, batches, cfg = _gcn_job(tmp_path / "a", 30)
+    state, hist = train_loop.run(state, step, batches, cfg, log=lambda *_: None)
+    assert hist["loss"][-1] < 0.5 * hist["loss"][0]
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    ckpt = tmp_path / "b"
+    state, step, batches, cfg = _gcn_job(ckpt, 10)
+    state, _ = train_loop.run(state, step, batches, cfg, log=lambda *_: None)
+    assert state.step == 10
+    # new process-equivalent: fresh state, same ckpt dir, more steps
+    state2, step2, batches2, cfg2 = _gcn_job(ckpt, 20)
+    state2, hist2 = train_loop.run(state2, step2, batches2, cfg2,
+                                   log=lambda *_: None)
+    assert state2.step == 20
+    assert len(hist2["loss"]) == 10      # only steps 11..20 re-ran
+
+
+def test_failure_injection_recovers(tmp_path):
+    state, step, batches, cfg = _gcn_job(tmp_path / "c", 15)
+    boom = {"armed": True}
+
+    def injector(s):
+        if s == 8 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    state, hist = train_loop.run(state, step, batches, cfg,
+                                 fail_injector=injector, log=lambda *_: None)
+    assert state.step == 15
+    assert hist["retries"] == 1
+
+
+def test_too_many_failures_aborts(tmp_path):
+    state, step, batches, cfg = _gcn_job(tmp_path / "d", 10)
+
+    def always_fail(s):
+        raise RuntimeError("dead node")
+
+    with pytest.raises(RuntimeError, match="aborting"):
+        train_loop.run(state, step, batches, cfg, fail_injector=always_fail,
+                       log=lambda *_: None)
+
+
+def test_lm_loss_decreases():
+    from repro.models.lm import transformer as T
+    cfg = registry.get_config("qwen3-0.6b", reduced=True)
+    params = T.init_params(jax.random.key(0), cfg)
+    opt = adamw.init_state(params)
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    toks = jnp.asarray(syn.token_batch(4, 64, cfg.vocab))
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(T.loss_fn)(p, cfg, toks)
+        p, o, _ = adamw.apply_updates(p, g, o, ocfg)
+        return p, o, loss
+
+    losses = []
+    for _ in range(12):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_compressed_grads_error_feedback():
+    """int8 + error feedback: long-run average ≈ true gradient."""
+    from repro.optim import compression
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    residual = compression.init_residual(g_true)
+    acc = jnp.zeros_like(g_true["w"])
+    for _ in range(50):
+        dec, residual = compression.error_feedback_compress(g_true, residual)
+        acc = acc + dec["w"]
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true["w"]),
+                               atol=2e-2)

@@ -1,0 +1,111 @@
+"""Per-backend sweep of the unified aggregation engine — the perf-trajectory
+benchmark behind ``BENCH_backends.json``.
+
+One identical graph per size point; every registered executor (selected by
+config string) is timed on ``aggregate`` and on a full GCN forward, and the
+numeric deviation against the ``dense`` reference is recorded so the JSON
+doubles as a parity check.  ``benchmarks/run.py`` writes the collected
+records to ``BENCH_backends.json`` so the trajectory is tracked per PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import powerlaw_graph
+from repro.models.gnn import gcn
+from repro.sparse import backend as sparse_backend
+from repro.sparse.graph import sym_norm_weights
+from repro.sparse.plan import make_plan
+
+BACKENDS = sparse_backend.ALL_BACKENDS
+SIZES = ((1024, 4096, 32), (4096, 16384, 64))   # (n, e, d)
+
+_CACHE = None
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def sweep_aggregate(plan, x, backends=BACKENDS):
+    """Time ``aggregate`` per backend on one (plan, x); the single sweep
+    loop shared by every benchmark module.  → [(name, us, dev_vs_dense)]."""
+    ref = sparse_backend.aggregate(plan, None, x, backend="dense")
+    rows = []
+    for name in backends:
+        fn = jax.jit(lambda xx, nm=name: sparse_backend.aggregate(
+            plan, None, xx, backend=nm))
+        dev = float(jnp.abs(ref - fn(x)).max())
+        rows.append((name, _timeit(fn, x), dev))
+    return rows
+
+
+def collect():
+    """Records: aggregate + GCN-forward per (backend × size), with parity."""
+    global _CACHE
+    if _CACHE is not None:
+        return _CACHE
+    records = []
+    for n, e, d in SIZES:
+        rng = np.random.default_rng(n)
+        s, r = powerlaw_graph(n, e + 256, seed=n)
+        s, r = s[:e], r[:e]
+        vals = rng.normal(size=e).astype(np.float32)
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        plan = make_plan(s, r, n, edge_weight=vals,
+                         backends=sparse_backend.ALL_BACKENDS,
+                         chunk=min(4096, e))
+        for name, us, dev in sweep_aggregate(plan, x):
+            records.append({
+                "kind": "aggregate", "backend": name,
+                "n": n, "e": e, "d": d,
+                "us_per_call": round(us, 1),
+                "max_abs_dev_vs_dense": dev,
+            })
+    # GCN forward on a Cora-sized graph, one plan, every executor
+    n = 1024
+    rng = np.random.default_rng(7)
+    s, r = powerlaw_graph(n, 4096, seed=7)
+    s2, r2, w = sym_norm_weights(s, r, n)
+    plan = make_plan(s2, r2, n + 1, edge_weight=w,
+                     backends=sparse_backend.ALL_BACKENDS, chunk=2048)
+    cfg = dataclasses.replace(gcn.GCNConfig(), d_in=48, d_hidden=16,
+                              n_classes=7)
+    params = gcn.init_params(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.normal(size=(n + 1, cfg.d_in)).astype(np.float32))
+    ref = gcn.forward(params, cfg, x, backend="dense", plan=plan)
+    for name in BACKENDS:
+        fn = jax.jit(lambda xx, nm=name: gcn.forward(params, cfg, xx,
+                                                     backend=nm, plan=plan))
+        dev = float(jnp.abs(ref - fn(x)).max())
+        records.append({
+            "kind": "gcn_forward", "backend": name,
+            "n": n, "e": 4096, "d": cfg.d_in,
+            "us_per_call": round(_timeit(fn, x), 1),
+            "max_abs_dev_vs_dense": dev,
+        })
+    _CACHE = records
+    return records
+
+
+def main():
+    print("# per-backend sweep (CPU wall-time; relative only)")
+    print("name,us_per_call,derived")
+    for rec in collect():
+        print(f"{rec['kind']}_{rec['backend']},{rec['us_per_call']:.0f},"
+              f"n={rec['n']};e={rec['e']};d={rec['d']};"
+              f"dev={rec['max_abs_dev_vs_dense']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

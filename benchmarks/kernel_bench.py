@@ -1,6 +1,7 @@
-"""Wall-time microbenchmarks of the Pallas kernels (interpret mode on CPU —
-relative numbers only; TPU is the compile target) and of the pure-JAX
-decoupled SpMM core vs its chunked rolling-eviction variant.
+"""Wall-time microbenchmarks of the sparse aggregation executors (one
+identical graph, every registered backend selected by config string) plus
+the legacy decoupled-SpMM core timings.  CPU wall-time, interpret-mode
+Pallas — relative numbers only; TPU is the compile target.
 """
 from __future__ import annotations
 
@@ -10,8 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.backend_sweep import sweep_aggregate
 from repro.core import spgemm
 from repro.data.synthetic import powerlaw_graph
+from repro.sparse import backend as sparse_backend
+from repro.sparse.plan import make_plan
 
 
 def timeit(fn, *args, n=5):
@@ -21,6 +25,21 @@ def timeit(fn, *args, n=5):
         out = fn(*args)
     out.block_until_ready()
     return (time.time() - t0) / n * 1e6
+
+
+def backend_rows(n=2048, e=8192, d=64, seed=1):
+    """Per-backend aggregate() timings on one identical graph (the sweep
+    loop itself lives in benchmarks.backend_sweep)."""
+    rng = np.random.default_rng(seed)
+    s, r = powerlaw_graph(n, e + 512, seed=seed)
+    s, r = s[:e], r[:e]
+    vals = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    plan = make_plan(s, r, n, edge_weight=vals,
+                     backends=sparse_backend.ALL_BACKENDS, chunk=2048)
+    return [{"backend": name, "us_per_call": round(us, 1),
+             "n": n, "e": e, "d": d}
+            for name, us, _ in sweep_aggregate(plan, x)]
 
 
 def run():
@@ -40,6 +59,9 @@ def run():
                                                   chunk=8192))
     rows.append(("spmm_rolling_chunked", timeit(lambda _: f_chunk(), 0),
                  "chunk=8192"))
+    for rec in backend_rows():
+        rows.append((f"backend_{rec['backend']}", rec["us_per_call"],
+                     f"n={rec['n']};e={rec['e']};d={rec['d']}"))
     return rows
 
 

@@ -4,17 +4,20 @@
 
 Modules: bloat_table (Table 1), speedup_table (Table 5 / Fig 16),
 mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
-(Fig 17), kernel_bench (Pallas kernels), roofline (§Roofline from dry-run).
+(Fig 17), kernel_bench (Pallas kernels), backend_sweep (unified sparse
+executors — also emitted as BENCH_backends.json for the perf trajectory),
+roofline (§Roofline from dry-run).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
 
-from benchmarks import (bloat_table, cpi_histograms, gnn_speedup,
-                        kernel_bench, mapping_heatmap, roofline,
-                        speedup_table)
+from benchmarks import (backend_sweep, bloat_table, cpi_histograms,
+                        gnn_speedup, kernel_bench, mapping_heatmap,
+                        roofline, speedup_table)
 
 MODULES = [
     ("table1_bloat", bloat_table),
@@ -23,8 +26,11 @@ MODULES = [
     ("fig14_15_cpi", cpi_histograms),
     ("fig17_gnn", gnn_speedup),
     ("pallas_kernels", kernel_bench),
+    ("backend_sweep", backend_sweep),
     ("roofline", roofline),
 ]
+
+BACKENDS_JSON = "BENCH_backends.json"
 
 
 def main() -> None:
@@ -39,6 +45,13 @@ def main() -> None:
             failures += 1
             print(f"### {name} FAILED")
             traceback.print_exc()
+    try:  # per-backend perf trajectory, tracked from PR 1 onward
+        with open(BACKENDS_JSON, "w") as f:
+            json.dump(backend_sweep.collect(), f, indent=1)
+        print(f"\nwrote {BACKENDS_JSON}")
+    except Exception:  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
     if failures:
         sys.exit(1)
 

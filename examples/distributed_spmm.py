@@ -13,6 +13,7 @@ import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
 from repro.core import distributed, drhm   # noqa: E402
+from repro.core.compat import use_mesh             # noqa: E402
 
 
 def main():
@@ -33,7 +34,7 @@ def main():
 
     ag = distributed.make_allgather_spmm(mesh, plan)     # paper-faithful
     ring = distributed.make_ring_spmm(mesh, plan)        # overlap schedule
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y1 = ag(xp, jnp.asarray(plan.rows_local),
                 jnp.asarray(plan.cols_perm), jnp.asarray(plan.vals))
         y2 = ring(xp, jnp.asarray(plan.ring_rows),

@@ -1,5 +1,6 @@
 """Quickstart: the paper's workload — GCN on a Cora-scale graph — trained
-end-to-end on the decoupled SpGEMM core.
+end-to-end on the decoupled SpGEMM core, then the same aggregation executed
+on every registered sparse backend (identical outputs, one API):
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,11 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.core import spgemm
 from repro.data import synthetic as syn
 from repro.models.gnn import gcn
 from repro.optim import adamw
+from repro.sparse import backend as sb
 from repro.sparse.graph import make_graph, sym_norm_weights
+from repro.sparse.plan import plan_from_graph
 
 
 def main():
@@ -30,7 +32,8 @@ def main():
     mask = jnp.asarray(mask)
     xj = jnp.asarray(x)
 
-    # 2. model: the paper's GCN, aggregation = decoupled Gustavson SpMM
+    # 2. model: the paper's GCN; aggregation dispatches through the unified
+    #    backend registry (backend="dense" — swap freely below)
     cfg = dataclasses.replace(registry.get_config("gcn-cora"),
                               d_in=x.shape[1], n_classes=n_classes)
     params = gcn.init_params(jax.random.key(0), cfg)
@@ -50,15 +53,24 @@ def main():
         if i % 20 == 0 or i == 79:
             print(f"step {i:3d}  loss {float(loss):.4f}")
 
-    # 3. the same aggregation, three ways (all equal):
+    # 3. the same aggregation on every executor (all equal): one host-side
+    #    plan precomputes every layout — padded COO for dense/chunked,
+    #    DRHM-mapped blocked-ELL for pallas, the DRHM shard plan for
+    #    distributed — and the registry dispatches by name.
+    plan = plan_from_graph(g, backends=sb.ALL_BACKENDS, chunk=1024)
     h = xj @ params["layer0"]["w"]
-    full = spgemm.spmm_masked(g.receivers, g.senders, g.edge_weight, h,
-                              xj.shape[0], g.edge_valid)
-    rolling = spgemm.spmm_chunked(g.receivers, g.senders,
-                                  g.edge_weight * g.edge_valid, h,
-                                  xj.shape[0], chunk=1024)
-    print("rolling-eviction == one-shot:",
-          bool(jnp.allclose(full, rolling, atol=1e-4)))
+    ref = sb.aggregate(plan, None, h, backend="dense")
+    for name in ("chunked", "pallas", "distributed"):
+        out = sb.aggregate(plan, None, h, backend=name)
+        dev = float(jnp.abs(ref - out).max())
+        print(f"backend {name:12s} == dense: {dev < 1e-4}   (max |Δ| {dev:.2e})")
+
+    # ...and through the model itself — swap the executor with one string:
+    logits_ref = gcn.forward(params, cfg, xj, backend="dense", plan=plan)
+    for name in ("chunked", "pallas"):
+        logits = gcn.forward(params, cfg, xj, backend=name, plan=plan)
+        dev = float(jnp.abs(logits_ref - logits).max())
+        print(f"gcn.forward(backend={name!r}) == dense: {dev < 1e-4}")
 
 
 if __name__ == "__main__":

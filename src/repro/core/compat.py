@@ -1,0 +1,66 @@
+"""JAX version compatibility shims (single import point).
+
+The repo targets the unified ``jax.shard_map`` / ``jax.set_mesh`` /
+``jax.lax.pvary`` API; older installs (jax <= 0.4.x) expose shard_map only
+under ``jax.experimental.shard_map`` (with a *required* mesh argument), have
+no ``set_mesh`` (the ``with mesh:`` context plays that role), and no
+``pvary`` (only needed by the newer varying-axes type system, so it
+degrades to identity).  Everything mesh-related goes through here.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def _ambient_mesh():
+    """Best-effort lookup of the mesh installed by ``use_mesh``."""
+    try:
+        from jax._src import mesh as _mesh_lib
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        if pm.devices.size:
+            return pm
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am.axis_names:
+            return am
+    except Exception:  # noqa: BLE001
+        pass
+    return None
+
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kw):
+        if mesh is None:
+            return _shard_map(f, in_specs=in_specs, out_specs=out_specs, **kw)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kw):
+        if mesh is None:
+            mesh = _ambient_mesh()
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` as varying over mesh axes (no-op where unsupported)."""
+    fn = getattr(jax.lax, "pvary", None)
+    return x if fn is None else fn(x, axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for code that relies on the
+    ambient mesh (``jax.set_mesh`` on new jax, ``with mesh:`` on old)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext()

@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import drhm
+from repro.core.compat import pvary, shard_map
 from repro.sparse.graph import round_up
 
 Array = jax.Array
@@ -63,6 +64,9 @@ class DistSpmmPlan:
     ring_rows: Optional[np.ndarray] = None   # dest slot within owner
     ring_cols: Optional[np.ndarray] = None   # source slot within src block
     ring_vals: Optional[np.ndarray] = None
+    # slot of input edge i in the flat (n_shards * edges_per_shard) layout —
+    # lets callers scatter traced edge values into the owner-grouped order.
+    slots: Optional[np.ndarray] = None       # (E,) int32
 
     @property
     def n_pad(self) -> int:
@@ -100,12 +104,14 @@ def plan_distributed_spmm(rows: np.ndarray, cols: np.ndarray,
     vals_p = np.zeros((n_shards, e_per), np.float32)
     starts = np.zeros(n_shards + 1, np.int64)
     np.cumsum(counts, out=starts[1:])
+    slots = np.zeros(rows.shape[0], np.int32)
     for s in range(n_shards):
         lo, hi = starts[s], starts[s + 1]
         k = hi - lo
         rows_l[s, :k] = d_s[lo:hi] % r_per
         cols_p[s, :k] = s_s[lo:hi]
         vals_p[s, :k] = v_s[lo:hi]
+        slots[order[lo:hi]] = s * e_per + np.arange(k, dtype=np.int32)
 
     ring_rows = ring_cols = ring_vals = None
     if ring:
@@ -133,6 +139,7 @@ def plan_distributed_spmm(rows: np.ndarray, cols: np.ndarray,
         rows_local=rows_l.reshape(-1), cols_perm=cols_p.reshape(-1),
         vals=vals_p.reshape(-1), perm=perm, inv_perm=shard_plan.inv_perm,
         ring_rows=ring_rows, ring_cols=ring_cols, ring_vals=ring_vals,
+        slots=slots,
     )
 
 
@@ -178,10 +185,32 @@ def make_allgather_spmm_dims(mesh, rows_per_shard: int, data_axis="data",
         # stage 2: NeuraMem — local accumulate into owned row block
         return jax.ops.segment_sum(pp, rows_l, num_segments=r_per)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis), P(data_axis)),
         out_specs=P(data_axis, model_axis),
+    )
+
+
+def make_owner_accumulate(mesh, rows_per_shard: int, data_axis="data"):
+    """Accumulate-only distributed stage: per-edge messages are already
+    formed (vector-valued multiply stage ran upstream) and grouped by the
+    DRHM owner of their destination row, so each shard folds its slice
+    locally — no partial product crosses the network.
+
+    Returned fn: (messages, rows_local) -> y_perm
+    messages: (n_shards*e_per, D) P(data); rows_local: (n_shards*e_per,)
+    P(data); y_perm: (n_pad, D) P(data).
+    """
+    r_per = rows_per_shard
+
+    def local_fn(m_loc, rows_l):
+        return jax.ops.segment_sum(m_loc, rows_l, num_segments=r_per)
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(data_axis), P(data_axis)),
+        out_specs=P(data_axis),
     )
 
 
@@ -227,11 +256,11 @@ def make_ring_spmm_dims(mesh, rows_per_shard: int, n_shards: int,
                      else (data_axis,))
         if model_axis:
             vary_axes = vary_axes + (model_axis,)
-        acc0 = jax.lax.pvary(acc0, vary_axes)
+        acc0 = pvary(acc0, vary_axes)
         acc, _ = jax.lax.fori_loop(0, n_sh, hop, (acc0, x_loc))
         return acc
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(data_axis, model_axis), P(data_axis, None, None),
                   P(data_axis, None, None), P(data_axis, None, None)),

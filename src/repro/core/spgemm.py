@@ -74,6 +74,27 @@ def spmm_masked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
     return accumulate_stage(pp, rows, n_rows)
 
 
+def _pad_edges(rows: Array, cols: Optional[Array], vals: Optional[Array],
+               n_rows: int, chunk: int):
+    """Pad edge arrays to the next ``chunk`` multiple (ghost-row convention:
+    padding lanes scatter to row ``n_rows``, which segment_sum drops as
+    out-of-bounds, and carry value 0).  ``vals`` may carry trailing feature
+    dims (accumulate-only path).  Shapes are static, so this is free under
+    jit.  Returns (rows, cols, vals, effective_chunk)."""
+    e = rows.shape[0]
+    chunk = max(1, min(chunk, e))
+    e_pad = ((e + chunk - 1) // chunk) * chunk
+    if e_pad != e:
+        pad = e_pad - e
+        rows = jnp.concatenate([rows, jnp.full((pad,), n_rows, rows.dtype)])
+        if cols is not None:
+            cols = jnp.concatenate([cols, jnp.zeros((pad,), cols.dtype)])
+        if vals is not None:
+            vals = jnp.concatenate(
+                [vals, jnp.zeros((pad,) + vals.shape[1:], vals.dtype)])
+    return rows, cols, vals, chunk
+
+
 @partial(jax.jit, static_argnames=("n_rows", "chunk"))
 def spmm_chunked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
                  n_rows: int, chunk: int = 8192) -> Array:
@@ -81,10 +102,11 @@ def spmm_chunked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
 
     Edges are processed in ``chunk``-sized waves; each wave's partial products
     are folded into the output immediately, so peak interim memory is
-    O(chunk · D).  Requires E % chunk == 0 (pad edges first).
+    O(chunk · D).  Edge arrays are auto-padded to the next chunk multiple
+    (padding lanes scatter value 0 to the dropped row ``n_rows``).
     """
+    rows, cols, vals, chunk = _pad_edges(rows, cols, vals, n_rows, chunk)
     e = rows.shape[0]
-    assert e % chunk == 0, f"edge count {e} not divisible by chunk {chunk}"
     n_chunks = e // chunk
     rows_c = rows.reshape(n_chunks, chunk)
     cols_c = cols.reshape(n_chunks, chunk)
@@ -103,6 +125,28 @@ def spmm_chunked(rows: Array, cols: Array, vals: Optional[Array], x: Array,
     init = jnp.zeros((n_rows, x.shape[1]), dtype=x.dtype)
     xs = (rows_c, cols_c) if vals_c is None else (rows_c, cols_c, vals_c)
     acc, _ = jax.lax.scan(body, init, xs)
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n_rows", "chunk"))
+def segment_sum_chunked(rows: Array, messages: Array, n_rows: int,
+                        chunk: int = 8192) -> Array:
+    """Accumulate-only rolling eviction: fold precomputed per-edge messages
+    into their destination rows in ``chunk``-sized waves.  The multiply stage
+    already happened upstream (e.g. SchNet's continuous filters produce
+    vector-valued edge messages); this is the NeuraMem half alone."""
+    rows, _, messages, chunk = _pad_edges(rows, None, messages, n_rows,
+                                          chunk)
+    n_chunks = rows.shape[0] // chunk
+    rows_c = rows.reshape(n_chunks, chunk)
+    msg_c = messages.reshape((n_chunks, chunk) + messages.shape[1:])
+
+    def body(acc, inputs):
+        r, m = inputs
+        return acc + jax.ops.segment_sum(m, r, num_segments=n_rows), None
+
+    init = jnp.zeros((n_rows,) + messages.shape[1:], dtype=messages.dtype)
+    acc, _ = jax.lax.scan(body, init, (rows_c, msg_c))
     return acc
 
 

@@ -34,10 +34,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     def kv_block(ki, _):
         @pl.when(ki * block_k <= qi * block_q + block_q - 1)   # causal skip
         def _():
-            k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
-            v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
+            # leading dim via a 1-sized dslice: bare int indices are not
+            # accepted by pl.load on every pallas version
+            k = pl.load(k_ref, (pl.dslice(0, 1),
+                                pl.dslice(ki * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
+            v = pl.load(v_ref, (pl.dslice(0, 1),
+                                pl.dslice(ki * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
             s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32)
             k_pos = ki * block_k + jax.lax.broadcasted_iota(

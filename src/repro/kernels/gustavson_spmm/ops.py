@@ -1,7 +1,18 @@
-"""Jit'd public wrapper: COO → blocked-ELL → Pallas Gustavson SpMM."""
+"""Public wrappers for the Pallas Gustavson SpMM kernel.
+
+``spmm`` — COO → blocked-ELL → kernel, packing host-side once per call.
+``spmm_blocked_ell_grad`` — the kernel with a custom VJP so it is usable as a
+production *training* path: the forward pass runs the Pallas pipeline, the
+backward pass is the transpose SpMM expressed in plain JAX (dX = Aᵀ·dY via
+segment-sum over source rows; dvals = per-nnz ⟨X row, dY row⟩), which keeps
+the decoupled multiply/accumulate structure in both directions.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_blocked_ell
@@ -11,6 +22,51 @@ from repro.sparse.graph import pack_blocked_ell
 
 def is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _float0_zeros(a: jax.Array):
+    """Cotangent for integer-valued primals (JAX convention: float0)."""
+    return np.zeros(a.shape, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm_blocked_ell_ad(block_rows, interpret, cols, row_local, vals,
+                         remaining, x):
+    return spmm_blocked_ell(cols, row_local, vals, remaining, x,
+                            block_rows=block_rows, interpret=interpret)
+
+
+def _ad_fwd(block_rows, interpret, cols, row_local, vals, remaining, x):
+    y = _spmm_blocked_ell_ad(block_rows, interpret, cols, row_local, vals,
+                             remaining, x)
+    return y, (cols, row_local, vals, remaining, x)
+
+
+def _ad_bwd(block_rows, interpret, res, dy):
+    cols, row_local, vals, remaining, x = res
+    n_blocks, nnz_pad = cols.shape
+    rows_g = (row_local + jnp.arange(n_blocks, dtype=jnp.int32)[:, None]
+              * block_rows).reshape(-1)
+    cols_f = cols.reshape(-1)
+    dy_rows = jnp.take(dy, rows_g, axis=0)                     # (nnz, D)
+    x_rows = jnp.take(x, cols_f, axis=0)
+    dvals = jnp.sum(dy_rows * x_rows, axis=-1).reshape(n_blocks, nnz_pad)
+    dx = jax.ops.segment_sum(dy_rows * vals.reshape(-1)[:, None], cols_f,
+                             num_segments=x.shape[0])
+    return (_float0_zeros(cols), _float0_zeros(row_local), dvals,
+            _float0_zeros(remaining), dx.astype(x.dtype))
+
+
+_spmm_blocked_ell_ad.defvjp(_ad_fwd, _ad_bwd)
+
+
+def spmm_blocked_ell_grad(cols, row_local, vals, remaining, x,
+                          block_rows: int = 8, interpret=None):
+    """Differentiable blocked-ELL SpMM (grads flow to ``vals`` and ``x``)."""
+    if interpret is None:
+        interpret = not is_tpu()
+    return _spmm_blocked_ell_ad(block_rows, bool(interpret), cols, row_local,
+                                vals, remaining, x)
 
 
 def spmm(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, x,

@@ -50,28 +50,33 @@ def build_lm_step(cfg, shape, opt_cfg=None):
 # ---------------------------------------------------------------------------
 
 def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
-                   opt_cfg=None, spmm_fn=None):
+                   opt_cfg=None, backend: str = "dense", plan=None,
+                   triplet_plan=None):
+    """``backend`` selects the sparse executor by registry name
+    (``dense``/``chunked``/``pallas``/``distributed``); ``plan`` is a
+    host-built ``repro.sparse.plan.make_plan`` — required for the latter
+    two, optional (inline COO plan) for the former."""
     opt_cfg = opt_cfg or adamw.AdamWConfig()
     kind = ARCHS[arch_id].gnn_kind
     n_graphs = statics["n_graphs"]
+    bk = {"backend": backend, "plan": plan}
 
     if kind == "conv":
         if arch_id.startswith("gcn"):
             from repro.models.gnn import gcn
-            extra = {} if spmm_fn is None else {"spmm_fn": spmm_fn}
 
             def loss(p, b):
                 return gcn.loss_fn(p, cfg, b["x"], b["senders"],
                                    b["receivers"], b["edge_weight"],
                                    b["edge_valid"], b["labels"],
-                                   b["label_mask"], **extra)
+                                   b["label_mask"], **bk)
         else:
             from repro.models.gnn import gat
 
             def loss(p, b):
                 return gat.loss_fn(p, cfg, b["x"], b["senders"],
                                    b["receivers"], b["edge_valid"],
-                                   b["labels"], b["label_mask"])
+                                   b["labels"], b["label_mask"], **bk)
         return _train_wrap(loss, opt_cfg)
 
     if arch_id == "schnet":
@@ -80,7 +85,8 @@ def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
         def loss(p, b):
             return schnet.loss_fn(p, cfg, b["species"], b["pos"], b["senders"],
                                   b["receivers"], b["edge_valid"],
-                                  b["graph_ids"], n_graphs, b["targets"])
+                                  b["graph_ids"], n_graphs, b["targets"],
+                                  **bk)
     else:
         from repro.models.gnn import dimenet
 
@@ -89,7 +95,8 @@ def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
                                    b["senders"], b["receivers"],
                                    b["edge_valid"], b["t_in"], b["t_out"],
                                    b["t_valid"], b["graph_ids"], n_graphs,
-                                   b["targets"])
+                                   b["targets"], **bk,
+                                   triplet_plan=triplet_plan)
     return _train_wrap(loss, opt_cfg)
 
 
@@ -115,12 +122,15 @@ def build_recsys_step(cfg, shape, opt_cfg=None):
     return serve
 
 
-def build_step(arch_id: str, cfg, shape, statics, opt_cfg=None):
+def build_step(arch_id: str, cfg, shape, statics, opt_cfg=None,
+               backend: str = "dense", plan=None, triplet_plan=None):
     fam = ARCHS[arch_id].family
     if fam == "lm":
         return build_lm_step(cfg, shape, opt_cfg)
     if fam == "gnn":
-        return build_gnn_step(arch_id, cfg, shape, statics, opt_cfg)
+        return build_gnn_step(arch_id, cfg, shape, statics, opt_cfg,
+                              backend=backend, plan=plan,
+                              triplet_plan=triplet_plan)
     return build_recsys_step(cfg, shape, opt_cfg)
 
 

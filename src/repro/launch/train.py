@@ -47,8 +47,9 @@ def _lm_setup(cfg, batch, seq, seed):
     return params, step, batches
 
 
-def _gnn_setup(arch_id, cfg, seed, full: bool):
+def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense"):
     from repro.sparse.graph import make_graph, sym_norm_weights
+    from repro.sparse.plan import plan_from_graph
     s, r, x, y, c = syn.cora_like(seed)
     n = 2708
     if arch_id.startswith("gcn"):
@@ -71,9 +72,14 @@ def _gnn_setup(arch_id, cfg, seed, full: bool):
              "labels": jnp.asarray(labels), "label_mask": jnp.asarray(mask)}
     if arch_id.startswith("gcn"):
         batch["edge_weight"] = g.edge_weight
+    # pallas/distributed need host-precomputed layouts; dense/chunked run
+    # off the inline plan the model builds from the batch arrays
+    plan = (plan_from_graph(g, backends=(backend,))
+            if backend in ("pallas", "distributed") else None)
     shape = S.GNN_SHAPES["full_graph_sm"]
     step = steps_mod.build_gnn_step(arch_id, cfg, shape,
-                                    {"n_graphs": 1}, adamw.AdamWConfig(lr=1e-2))
+                                    {"n_graphs": 1}, adamw.AdamWConfig(lr=1e-2),
+                                    backend=backend, plan=plan)
 
     def batches():
         while True:
@@ -94,6 +100,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--full-gnn", action="store_true",
                     help="full (non-reduced) GNN config on Cora-scale data")
+    from repro.sparse.plan import ALL_BACKENDS
+    ap.add_argument("--backend", default="dense", choices=list(ALL_BACKENDS),
+                    help="sparse aggregation executor (GNN archs)")
     args = ap.parse_args()
 
     if args.preset == "lm100m":
@@ -111,7 +120,8 @@ def main():
         elif fam == "gnn":
             cfg = registry.get_config(arch_id, reduced=not args.full_gnn)
             params, step, batches = _gnn_setup(arch_id, cfg, args.seed,
-                                               args.full_gnn)
+                                               args.full_gnn,
+                                               backend=args.backend)
         else:
             from repro.models.recsys import dlrm
             cfg = registry.get_config(arch_id, reduced=True)

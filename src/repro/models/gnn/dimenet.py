@@ -10,15 +10,23 @@ Basis simplification vs. the paper (documented in DESIGN.md §8): spherical
 Bessel j_l → sin(nπd/c)/d radial form for all orders, spherical harmonics
 Y_l(θ) → cos(lθ) Chebyshev angular basis.  Shapes/flops match the paper's
 (n_spherical × n_radial) layout exactly.
+
+Aggregations dispatch through the backend engine's accumulate-only entry on
+*two* plans — the triplet graph (t_in → t_out over the edge domain) and the
+node graph (edges → receivers) — so even the triplet-gather regime swaps
+executors with a config string.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.common import mlp_apply, mlp_init
+from repro.sparse import backend as sparse_backend
+from repro.sparse.plan import AggregationPlan, edge_plan
 
 Array = jax.Array
 
@@ -112,11 +120,17 @@ def init_params(key, cfg: DimeNetConfig):
 def forward(params, cfg: DimeNetConfig, species: Array, pos: Array,
             senders: Array, receivers: Array, edge_valid: Array,
             t_in: Array, t_out: Array, t_valid: Array,
-            graph_ids: Array, n_graphs: int) -> Array:
+            graph_ids: Array, n_graphs: int, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None,
+            triplet_plan: Optional[AggregationPlan] = None) -> Array:
     """Edge-message DimeNet.  t_in/t_out index the edge list (triplets)."""
     n = species.shape[0]
     e = senders.shape[0]
     act = jax.nn.silu
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, n, edge_valid=edge_valid)
+    pt = triplet_plan if triplet_plan is not None else edge_plan(
+        t_in, t_out, e, edge_valid=t_valid)
 
     h = jnp.take(params["embed"], species, axis=0)
     d_vec = jnp.take(pos, senders, axis=0) - jnp.take(pos, receivers, axis=0)
@@ -152,7 +166,7 @@ def forward(params, cfg: DimeNetConfig, species: Array, pos: Array,
         for bidx in range(cfg.n_bilinear):
             contrib = contrib + sb[:, bidx:bidx + 1] * (x_t @ w_bil[bidx])
         contrib = _pin(contrib, cfg)
-        agg = _pin(jax.ops.segment_sum(contrib, t_out, num_segments=e), cfg)
+        agg = _pin(sparse_backend.accumulate(pt, contrib, backend=backend), cfg)
         m = act(m @ p["w_self"].astype(h.dtype)) + agg
         m = m + act(m @ p["w_out1"].astype(h.dtype)) @ p["w_out2"].astype(h.dtype)
         return _pin(m * edge_valid[:, None].astype(h.dtype), cfg), None
@@ -164,13 +178,17 @@ def forward(params, cfg: DimeNetConfig, species: Array, pos: Array,
 
     # output block: edges → nodes → graphs
     per_edge = m * (rbf @ params["blocks"]["rbf_out"][-1].astype(h.dtype))
-    node_h = jax.ops.segment_sum(per_edge, receivers, num_segments=n)
+    node_h = sparse_backend.accumulate(pl, per_edge, backend=backend)
     atom_e = mlp_apply(params["output"], node_h, act=act)[:, 0]
     return jax.ops.segment_sum(atom_e, graph_ids, num_segments=n_graphs)
 
 
 def loss_fn(params, cfg: DimeNetConfig, species, pos, senders, receivers,
-            edge_valid, t_in, t_out, t_valid, graph_ids, n_graphs, targets):
+            edge_valid, t_in, t_out, t_valid, graph_ids, n_graphs, targets,
+            backend: str = "dense",
+            plan: Optional[AggregationPlan] = None,
+            triplet_plan: Optional[AggregationPlan] = None):
     e = forward(params, cfg, species, pos, senders, receivers, edge_valid,
-                t_in, t_out, t_valid, graph_ids, n_graphs)
+                t_in, t_out, t_valid, graph_ids, n_graphs, backend=backend,
+                plan=plan, triplet_plan=triplet_plan)
     return jnp.mean((e.astype(jnp.float32) - targets) ** 2)

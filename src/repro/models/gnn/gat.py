@@ -3,15 +3,21 @@
 The attention-score stage is exactly the paper's multiply stage with a
 different reducer: NeuraCore produces per-edge partial products (here score
 logits), NeuraMem merges per destination row (here a max/sum pair for the
-softmax) — the decoupled structure carries over unchanged.
+softmax) — the decoupled structure carries over unchanged.  The weighted
+aggregation itself dispatches through the unified backend engine with the
+traced attention weights as the per-edge values (the plan's scatter slots
+route them into the packed pallas / distributed layouts on device).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.sparse import backend as sb
+from repro.sparse.plan import AggregationPlan, edge_plan
 from repro.sparse.segment_ops import segment_softmax
 
 Array = jax.Array
@@ -59,9 +65,10 @@ def init_params(key, cfg: GATConfig):
     return params
 
 
-def gat_layer(p, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
-              edge_valid: Array, average_heads: bool) -> Array:
+def gat_layer(p, cfg: GATConfig, x: Array, pl: AggregationPlan,
+              average_heads: bool, backend: str = "dense") -> Array:
     n = x.shape[0]
+    senders, receivers, edge_valid = pl.cols, pl.rows, pl.valid
     h = _pin(jnp.einsum("nd,dhf->nhf", x, p["w"].astype(x.dtype)), cfg)
     # SDDMM stage: per-edge attention logits
     e_src = (h * p["a_src"].astype(x.dtype)).sum(-1)           # (N, H)
@@ -73,9 +80,13 @@ def gat_layer(p, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
     logits = _pin(jnp.where(edge_valid[:, None], logits, -1e30), cfg)
     alpha = segment_softmax(logits, receivers, n).astype(x.dtype)
     alpha = _pin(jnp.where(edge_valid[:, None], alpha, 0), cfg)
-    # multiply stage: weighted messages; accumulate stage: segment sum
-    msg = _pin(jnp.take(h, senders, axis=0) * alpha[..., None], cfg)
-    agg = _pin(jax.ops.segment_sum(msg, receivers, num_segments=n), cfg)
+    # multiply stage: attention-weighted messages; accumulate stage: one
+    # decoupled SpMM per head on the selected executor
+    heads = h.shape[1]
+    agg = jnp.stack(
+        [sb.aggregate(pl, alpha[:, hd], h[:, hd, :], backend=backend)
+         for hd in range(heads)], axis=1)
+    agg = _pin(agg, cfg)
     if average_heads:
         out = agg.mean(axis=1)
     else:
@@ -84,21 +95,27 @@ def gat_layer(p, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
     return _pin(out, cfg)
 
 
-def forward(params, cfg: GATConfig, x: Array, senders: Array, receivers: Array,
-            edge_valid: Array) -> Array:
+def forward(params, cfg: GATConfig, x: Array, senders: Array = None,
+            receivers: Array = None, edge_valid: Array = None,
+            backend: str = "dense",
+            plan: Optional[AggregationPlan] = None) -> Array:
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, x.shape[0], edge_valid=edge_valid)
     h = x
     for i in range(cfg.n_layers):
         last = i == cfg.n_layers - 1
-        h = gat_layer(params[f"layer{i}"], cfg, h, senders, receivers,
-                      edge_valid, average_heads=last)
+        h = gat_layer(params[f"layer{i}"], cfg, h, pl,
+                      average_heads=last, backend=backend)
         if not last:
             h = jax.nn.elu(h)
     return h
 
 
 def loss_fn(params, cfg: GATConfig, x, senders, receivers, edge_valid,
-            labels, label_mask):
-    logits = forward(params, cfg, x, senders, receivers, edge_valid)
+            labels, label_mask, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None):
+    logits = forward(params, cfg, x, senders, receivers, edge_valid,
+                     backend=backend, plan=plan)
     logits = logits.astype(jnp.float32)
     logp = jax.nn.log_softmax(logits, axis=-1)
     ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]

@@ -1,20 +1,23 @@
 """GCN (Kipf & Welling) on the decoupled SpMM core — the paper's own GNN
 workload (NeuraChip §5.4 evaluates a GCN layer; A.3.3 uses Cora/Tile-16).
 
-``spmm_fn`` is injected so the same model runs on the local decoupled SpMM,
-the chunked rolling-eviction SpMM, the DRHM-sharded distributed SpMM, or the
-Pallas Gustavson kernel — the model is agnostic (paper C1 as a framework
-property).
+Aggregation goes through the unified sparse-backend engine
+(``repro.sparse.backend``): pass ``backend="dense"|"chunked"|"pallas"|
+"distributed"`` to pick the executor — the model is agnostic (paper C1 as a
+framework property).  ``dense``/``chunked`` run off an inline plan built from
+the traced edge arrays; ``pallas``/``distributed`` need a host-built
+``repro.sparse.plan.make_plan`` passed as ``plan=``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import spgemm
+from repro.sparse import backend as sb
+from repro.sparse.plan import AggregationPlan, edge_plan
 
 Array = jax.Array
 
@@ -42,10 +45,6 @@ def _pin_nodes(x, cfg: GCNConfig):
         x, P(cfg.dp_axes, *([None] * (x.ndim - 1))))
 
 
-def default_spmm(rows, cols, vals, x, n_rows, valid):
-    return spgemm.spmm_masked(rows, cols, vals, x, n_rows, valid)
-
-
 def init_params(key, cfg: GCNConfig):
     dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
     keys = jax.random.split(key, cfg.n_layers)
@@ -60,20 +59,23 @@ def init_params(key, cfg: GCNConfig):
     }
 
 
-def forward(params, cfg: GCNConfig, x: Array, senders: Array, receivers: Array,
-            edge_weight: Optional[Array], edge_valid: Array,
-            spmm_fn: Callable = default_spmm) -> Array:
+def forward(params, cfg: GCNConfig, x: Array, senders: Array = None,
+            receivers: Array = None, edge_weight: Optional[Array] = None,
+            edge_valid: Array = None, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None) -> Array:
     """x: (N_pad, d_in) — returns logits (N_pad, n_classes).
 
     Aggregation direction: receivers accumulate sender features (rows =
-    receivers, cols = senders) — one Gustavson SpMM per layer.
+    receivers, cols = senders) — one Gustavson SpMM per layer, dispatched on
+    the named backend.
     """
-    n = x.shape[0]
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, x.shape[0], edge_weight, edge_valid)
     h = x
     for i in range(cfg.n_layers):
         p = params[f"layer{i}"]
         h = _pin_nodes(h @ p["w"].astype(h.dtype), cfg)   # combination (dense)
-        h = spmm_fn(receivers, senders, edge_weight, h, n, edge_valid)  # aggregation
+        h = sb.aggregate(pl, None, h, backend=backend)    # aggregation
         h = _pin_nodes(h, cfg) + p["b"].astype(h.dtype)
         if i < cfg.n_layers - 1:
             h = jax.nn.relu(h)
@@ -81,9 +83,11 @@ def forward(params, cfg: GCNConfig, x: Array, senders: Array, receivers: Array,
 
 
 def loss_fn(params, cfg: GCNConfig, x, senders, receivers, edge_weight,
-            edge_valid, labels, label_mask, spmm_fn: Callable = default_spmm):
+            edge_valid, labels, label_mask, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None):
     logits = forward(params, cfg, x, senders, receivers, edge_weight,
-                     edge_valid, spmm_fn).astype(jnp.float32)
+                     edge_valid, backend=backend, plan=plan
+                     ).astype(jnp.float32)
     logp = jax.nn.log_softmax(logits, axis=-1)
     ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
     m = label_mask.astype(jnp.float32)

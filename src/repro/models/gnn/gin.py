@@ -3,17 +3,20 @@
 h_i' = MLP((1 + ε) · h_i + Σ_{j∈N(i)} h_j)
 
 Beyond the assigned four GNNs: the sum aggregator is the purest decoupled
-multiply/accumulate instance (vals ≡ 1), mapped on the same core SpMM.
+multiply/accumulate instance (vals ≡ 1), dispatched through the unified
+backend engine.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import spgemm
 from repro.models.common import mlp_apply, mlp_init
+from repro.sparse import backend as sb
+from repro.sparse.plan import AggregationPlan, edge_plan
 
 Array = jax.Array
 
@@ -44,13 +47,16 @@ def init_params(key, cfg: GINConfig):
     return params
 
 
-def forward(params, cfg: GINConfig, x: Array, senders: Array,
-            receivers: Array, edge_valid: Array) -> Array:
-    n = x.shape[0]
+def forward(params, cfg: GINConfig, x: Array, senders: Array = None,
+            receivers: Array = None, edge_valid: Array = None,
+            backend: str = "dense",
+            plan: Optional[AggregationPlan] = None) -> Array:
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, x.shape[0], edge_valid=edge_valid)
     h = x
     for i in range(cfg.n_layers):
         p = params[f"layer{i}"]
-        agg = spgemm.spmm_masked(receivers, senders, None, h, n, edge_valid)
+        agg = sb.aggregate(pl, None, h, backend=backend)
         h = mlp_apply(p["mlp"], (1.0 + p["eps"]) * h + agg, act=jax.nn.relu)
         if i < cfg.n_layers - 1:
             h = jax.nn.relu(h)
@@ -63,8 +69,10 @@ def graph_readout(h: Array, graph_ids: Array, n_graphs: int) -> Array:
 
 
 def loss_fn(params, cfg: GINConfig, x, senders, receivers, edge_valid,
-            graph_ids, n_graphs, labels):
-    h = forward(params, cfg, x, senders, receivers, edge_valid)
+            graph_ids, n_graphs, labels, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None):
+    h = forward(params, cfg, x, senders, receivers, edge_valid,
+                backend=backend, plan=plan)
     logits = graph_readout(h, graph_ids, n_graphs).astype(jnp.float32)
     logp = jax.nn.log_softmax(logits, axis=-1)
     ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),

@@ -3,16 +3,21 @@
 h_i' = act(W_self · h_i  ||  W_nbr · mean_{j∈N(i)} h_j)
 
 Beyond the assigned four GNNs: exercises the minibatch/fanout-sampler path
-(its native training regime) on the same decoupled multiply/accumulate core.
+(its native training regime).  The neighbor *sum* dispatches through the
+unified backend engine; the mean denominator (in-degree) is layout metadata
+computed once from the plan, so the executor swap touches only the
+bandwidth-bound reduction.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.segment_ops import segment_mean
+from repro.sparse import backend as sb
+from repro.sparse.plan import AggregationPlan, edge_plan
 
 Array = jax.Array
 
@@ -45,15 +50,20 @@ def init_params(key, cfg: SAGEConfig):
     return params
 
 
-def forward(params, cfg: SAGEConfig, x: Array, senders: Array,
-            receivers: Array, edge_valid: Array) -> Array:
-    n = x.shape[0]
+def forward(params, cfg: SAGEConfig, x: Array, senders: Array = None,
+            receivers: Array = None, edge_valid: Array = None,
+            backend: str = "dense",
+            plan: Optional[AggregationPlan] = None) -> Array:
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, x.shape[0], edge_valid=edge_valid)
+    # in-degree: per-graph layout metadata, not per-layer compute
+    deg = jax.ops.segment_sum(pl.valid.astype(x.dtype), pl.rows,
+                              num_segments=pl.n_rows)
+    inv_deg = (1.0 / jnp.maximum(deg, 1.0))[:, None]
     h = x
     for i in range(cfg.n_layers):
         p = params[f"layer{i}"]
-        msg = jnp.take(h, senders, axis=0)
-        msg = jnp.where(edge_valid[:, None], msg, 0)
-        nbr = segment_mean(msg, jnp.where(edge_valid, receivers, n - 1), n)
+        nbr = sb.aggregate(pl, None, h, backend=backend) * inv_deg
         h = (h @ p["w_self"].astype(h.dtype)
              + nbr @ p["w_nbr"].astype(h.dtype) + p["b"].astype(h.dtype))
         if i < cfg.n_layers - 1:
@@ -62,9 +72,10 @@ def forward(params, cfg: SAGEConfig, x: Array, senders: Array,
 
 
 def loss_fn(params, cfg: SAGEConfig, x, senders, receivers, edge_valid,
-            labels, label_mask):
-    logits = forward(params, cfg, x, senders, receivers,
-                     edge_valid).astype(jnp.float32)
+            labels, label_mask, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None):
+    logits = forward(params, cfg, x, senders, receivers, edge_valid,
+                     backend=backend, plan=plan).astype(jnp.float32)
     logp = jax.nn.log_softmax(logits, axis=-1)
     ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
                              axis=-1)[:, 0]

@@ -7,15 +7,22 @@ stage), followed by segment accumulation (accumulate stage).
 Operates on flat node/edge arrays with a ``graph_ids`` readout segment, so the
 same code serves batched molecules (molecule shape) and single giant graphs
 (full_graph_sm / ogb_products with synthesized positions).
+
+The cfconv multiply stage is *vector-valued* (the filter W(d_ij) multiplies
+elementwise per channel), so aggregation dispatches through the backend
+engine's accumulate-only entry (``sb.accumulate``) — the NeuraMem half alone.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.common import mlp_apply, mlp_init, shifted_softplus
+from repro.sparse import backend as sb
+from repro.sparse.plan import AggregationPlan, edge_plan
 
 Array = jax.Array
 
@@ -73,10 +80,15 @@ def cosine_cutoff(d: Array, cutoff: float) -> Array:
 
 
 def forward(params, cfg: SchNetConfig, species: Array, pos: Array,
-            senders: Array, receivers: Array, edge_valid: Array,
-            graph_ids: Array, n_graphs: int) -> Array:
+            senders: Array = None, receivers: Array = None,
+            edge_valid: Array = None, graph_ids: Array = None,
+            n_graphs: int = 1, backend: str = "dense",
+            plan: Optional[AggregationPlan] = None) -> Array:
     """species (N,), pos (N,3), edges (E,), graph_ids (N,) → energies (G,)."""
     n = species.shape[0]
+    pl = plan if plan is not None else edge_plan(
+        senders, receivers, n, edge_valid=edge_valid)
+    senders, receivers, edge_valid = pl.cols, pl.rows, pl.valid
     x = jnp.take(params["embed"], species, axis=0)
     d_vec = jnp.take(pos, senders, axis=0) - jnp.take(pos, receivers, axis=0)
     dist = jnp.sqrt(jnp.sum(d_vec * d_vec, axis=-1) + 1e-12)
@@ -90,7 +102,7 @@ def forward(params, cfg: SchNetConfig, species: Array, pos: Array,
         w_filt = mlp_apply(p["filter"], rbf, act=shifted_softplus,
                            final_act=True)                    # (E, d)
         msg = _pin(jnp.take(h, senders, axis=0) * w_filt * fcut[:, None], cfg)
-        agg = _pin(jax.ops.segment_sum(msg, receivers, num_segments=n), cfg)
+        agg = _pin(sb.accumulate(pl, msg, backend=backend), cfg)
         v = shifted_softplus(agg @ p["w_out1"].astype(x.dtype))
         x = _pin(x + v @ p["w_out2"].astype(x.dtype), cfg)
 
@@ -99,7 +111,9 @@ def forward(params, cfg: SchNetConfig, species: Array, pos: Array,
 
 
 def loss_fn(params, cfg: SchNetConfig, species, pos, senders, receivers,
-            edge_valid, graph_ids, n_graphs, targets):
+            edge_valid, graph_ids, n_graphs, targets,
+            backend: str = "dense",
+            plan: Optional[AggregationPlan] = None):
     e = forward(params, cfg, species, pos, senders, receivers, edge_valid,
-                graph_ids, n_graphs)
+                graph_ids, n_graphs, backend=backend, plan=plan)
     return jnp.mean((e.astype(jnp.float32) - targets) ** 2)

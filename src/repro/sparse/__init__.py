@@ -1,1 +1,2 @@
-from repro.sparse import graph, segment_ops  # noqa: F401
+from repro.sparse import graph, plan, segment_ops  # noqa: F401
+from repro.sparse import backend  # noqa: F401  (imports plan; keep after)

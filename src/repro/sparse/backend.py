@@ -1,0 +1,230 @@
+"""Unified sparse-backend engine — one aggregation API, four executors.
+
+Every sparse aggregation in the repo goes through one call signature,
+
+    aggregate(plan, vals, x) -> y          # y[r] = Σ_e vals[e]·x[cols[e]]
+    accumulate(plan, messages) -> y        # y[r] = Σ_e messages[e]
+
+dispatched over a registry of interchangeable executors:
+
+* ``dense``       — one-shot gather + segment-sum (XLA scatter; baseline);
+* ``chunked``     — rolling-eviction waves (paper C3): partial products are
+                    produced and folded in fixed-size chunks so the interim
+                    working set is O(chunk·D), not O(nnz·D);
+* ``pallas``      — the blocked-ELL Gustavson TPU kernel (paper's MMH4/HACC
+                    pipeline; DESIGN.md §2.1), with a custom VJP so it is a
+                    training path, not a test fixture;
+* ``distributed`` — DRHM row-ownership + all-gather shard_map schedule
+                    (paper C1+C2 at pod scale; DESIGN.md §4).
+
+``vals`` may be ``None`` (use the plan's precomputed edge weights — GCN
+normalization, GIN's implicit 1.0) or a traced (E,) array (GAT attention);
+either way padding lanes contribute nothing.  ``accumulate`` is the
+NeuraMem half alone, for models whose multiply stage is vector-valued
+(SchNet continuous filters, DimeNet triplet contributions); the ``pallas``
+executor falls back to the chunked schedule there — the kernel's multiply
+stage is scalar-per-nnz by construction (DESIGN.md §3.3).
+
+Models never import ``repro.core.spgemm`` directly: they take a
+``backend="dense"|"chunked"|"pallas"|"distributed"`` name, resolved here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spgemm
+from repro.sparse.plan import (ALL_BACKENDS, AggregationPlan,
+                               BackendPlanError)
+
+Array = jax.Array
+
+__all__ = ["Backend", "BACKENDS", "ALL_BACKENDS", "BackendPlanError",
+           "register_backend", "get_backend", "aggregate", "accumulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered executor: full decoupled SpMM + accumulate-only entry."""
+
+    name: str
+    aggregate: Callable[[AggregationPlan, Optional[Array], Array], Array]
+    accumulate: Callable[[AggregationPlan, Array], Array]
+
+
+BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown sparse backend {name!r}; registered: "
+                       f"{sorted(BACKENDS)}") from None
+
+
+def aggregate(plan: AggregationPlan, vals: Optional[Array], x: Array,
+              backend: str = "dense") -> Array:
+    """y[r] = Σ_{e: rows[e]=r} vals[e] · x[cols[e]] on the named executor."""
+    if x.shape[0] != plan.n_rows:
+        # JAX gathers clip out-of-bounds indices, so a mismatched plan would
+        # return silently-wrong values instead of erroring — catch it here.
+        raise ValueError(
+            f"x has {x.shape[0]} rows but the plan was built for "
+            f"n_rows={plan.n_rows} (padded node count incl. ghost row)")
+    return get_backend(backend).aggregate(plan, vals, x)
+
+
+def accumulate(plan: AggregationPlan, messages: Array,
+               backend: str = "dense") -> Array:
+    """y[r] = Σ_{e: rows[e]=r} messages[e] on the named executor."""
+    if messages.shape[0] != plan.rows.shape[0]:
+        raise ValueError(
+            f"messages has {messages.shape[0]} entries but the plan holds "
+            f"{plan.rows.shape[0]} (padded) edges")
+    return get_backend(backend).accumulate(plan, messages)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _edge_vals(plan: AggregationPlan, vals: Optional[Array],
+               dtype) -> Array:
+    """Per-edge scalars with the padding contract enforced."""
+    if vals is None:
+        return plan.base_vals.astype(dtype)
+    return jnp.where(plan.valid, vals, 0).astype(dtype)
+
+
+def _mask_messages(plan: AggregationPlan, messages: Array) -> Array:
+    shape = (-1,) + (1,) * (messages.ndim - 1)
+    return jnp.where(plan.valid.reshape(shape), messages, 0)
+
+
+# ---------------------------------------------------------------------------
+# dense — one-shot gather + segment-sum
+# ---------------------------------------------------------------------------
+
+def _dense_aggregate(plan, vals, x):
+    pp = jnp.take(x, plan.cols, axis=0)
+    pp = pp * _edge_vals(plan, vals, pp.dtype)[:, None]
+    return jax.ops.segment_sum(pp, plan.rows, num_segments=plan.n_rows)
+
+
+def _dense_accumulate(plan, messages):
+    return jax.ops.segment_sum(_mask_messages(plan, messages), plan.rows,
+                               num_segments=plan.n_rows)
+
+
+register_backend(Backend("dense", _dense_aggregate, _dense_accumulate))
+
+
+# ---------------------------------------------------------------------------
+# chunked — rolling-eviction waves (paper C3)
+# ---------------------------------------------------------------------------
+
+def _chunked_aggregate(plan, vals, x):
+    v = _edge_vals(plan, vals, x.dtype)
+    return spgemm.spmm_chunked(plan.rows, plan.cols, v, x, plan.n_rows,
+                               chunk=plan.chunk)
+
+
+def _chunked_accumulate(plan, messages):
+    return spgemm.segment_sum_chunked(plan.rows,
+                                      _mask_messages(plan, messages),
+                                      plan.n_rows, chunk=plan.chunk)
+
+
+register_backend(Backend("chunked", _chunked_aggregate, _chunked_accumulate))
+
+
+# ---------------------------------------------------------------------------
+# pallas — blocked-ELL Gustavson kernel (compiled on TPU, interpret elsewhere)
+# ---------------------------------------------------------------------------
+
+def _pallas_aggregate(plan, vals, x):
+    from repro.kernels.gustavson_spmm import ops as gops
+    plan.require("ell", "pallas")
+    if vals is None:
+        v_ell = plan.ell_vals
+    else:
+        v = jnp.where(plan.valid, vals, 0).astype(jnp.float32)
+        flat = jnp.zeros((plan.n_blocks * plan.nnz_pad,), jnp.float32)
+        v_ell = flat.at[plan.ell_slots].set(v, mode="drop")
+        v_ell = v_ell.reshape(plan.n_blocks, plan.nnz_pad)
+    y = gops.spmm_blocked_ell_grad(plan.ell_cols, plan.ell_row_local, v_ell,
+                                   plan.ell_remaining,
+                                   x.astype(jnp.float32),
+                                   block_rows=plan.block_rows)
+    return y[: plan.n_rows].astype(x.dtype)
+
+
+def _pallas_accumulate(plan, messages):
+    # The kernel's multiply stage is scalar-per-nnz; vector-valued messages
+    # use the chunked rolling-eviction schedule instead (DESIGN.md §3.3).
+    return _chunked_accumulate(plan, messages)
+
+
+register_backend(Backend("pallas", _pallas_aggregate, _pallas_accumulate))
+
+
+# ---------------------------------------------------------------------------
+# distributed — DRHM row ownership + all-gather shard_map (paper C1+C2)
+# ---------------------------------------------------------------------------
+
+def _dist_edge_vals(plan, vals):
+    if vals is None:
+        return plan.dist_vals
+    v = jnp.where(plan.valid, vals, 0).astype(jnp.float32)
+    flat = jnp.zeros((plan.dist_rows_local.shape[0],), jnp.float32)
+    return flat.at[plan.dist_slots].set(v, mode="drop")
+
+
+def _dist_permute_in(plan, x):
+    pad = plan.dist_n_pad - x.shape[0]
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) if pad else x
+    return jnp.take(x_pad, plan.dist_inv_perm, axis=0)
+
+
+def _dist_permute_out(plan, y_perm, dtype):
+    return jnp.take(y_perm, plan.dist_perm[: plan.n_rows], axis=0
+                    ).astype(dtype)
+
+
+def _distributed_aggregate(plan, vals, x):
+    from repro.core import distributed
+    plan.require("dist", "distributed")
+    v = _dist_edge_vals(plan, vals)
+    x_perm = _dist_permute_in(plan, x.astype(jnp.float32))
+    fn = distributed.make_allgather_spmm_dims(plan.mesh, plan.rows_per_shard,
+                                              data_axis="data",
+                                              model_axis=None)
+    y_perm = fn(x_perm, plan.dist_rows_local, plan.dist_cols_perm, v)
+    return _dist_permute_out(plan, y_perm, x.dtype)
+
+
+def _distributed_accumulate(plan, messages):
+    from repro.core import distributed
+    plan.require("dist", "distributed")
+    m = _mask_messages(plan, messages).astype(jnp.float32)
+    flat = jnp.zeros((plan.dist_rows_local.shape[0],) + m.shape[1:],
+                     jnp.float32)
+    m_dist = flat.at[plan.dist_slots].set(m, mode="drop")
+    fn = distributed.make_owner_accumulate(plan.mesh, plan.rows_per_shard,
+                                           data_axis="data")
+    y_perm = fn(m_dist, plan.dist_rows_local)
+    return _dist_permute_out(plan, y_perm, messages.dtype)
+
+
+register_backend(Backend("distributed", _distributed_aggregate,
+                         _distributed_accumulate))

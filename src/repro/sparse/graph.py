@@ -108,6 +108,10 @@ class BlockedELL:
     n_rows: int
     n_cols: int
     block_rows: int
+    # slot of input edge i in the flattened (n_blocks * nnz_pad) layout —
+    # lets callers scatter *traced* edge values (e.g. attention weights)
+    # into the packed layout on device.
+    slots: Optional[np.ndarray] = None  # (E,) int32
 
     @property
     def n_blocks(self) -> int:
@@ -135,14 +139,16 @@ def pack_blocked_ell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     # bucket-fill
     starts = np.zeros(n_blocks + 1, dtype=np.int64)
     np.cumsum(counts, out=starts[1:])
+    slots = np.zeros(rows.shape[0], dtype=np.int32)
     for b in range(n_blocks):
         lo, hi = starts[b], starts[b + 1]
         k = hi - lo
         out_cols[b, :k] = cols[lo:hi]
         out_rloc[b, :k] = rows[lo:hi] - b * block_rows
         out_vals[b, :k] = vals[lo:hi]
+        slots[order[lo:hi]] = b * nnz_pad + np.arange(k, dtype=np.int32)
     return BlockedELL(
         cols=out_cols, row_local=out_rloc, vals=out_vals,
         remaining=counts.astype(np.int32), n_rows=n_rows, n_cols=n_cols,
-        block_rows=block_rows,
+        block_rows=block_rows, slots=slots,
     )

@@ -1,0 +1,227 @@
+"""Host-side aggregation plans — one layout precomputation per graph.
+
+NeuraChip's decoupling of Gustavson's multiply and accumulate stages (paper
+C1) is only an architectural property if every executor can sit behind the
+same call.  The **plan** is the piece that makes that true: for a fixed graph
+it precomputes, once, every layout the backend registry
+(``repro.sparse.backend``) might dispatch to:
+
+* padded COO (``rows``/``cols``/``base_vals``/``valid``) — the ``dense``
+  segment-sum executor and the ``chunked`` rolling-eviction executor;
+* DRHM-mapped blocked-ELL (``ell_*``, via ``pack_blocked_ell``) — the
+  ``pallas`` Gustavson kernel, plus per-edge ``ell_slots`` so *traced* edge
+  values (e.g. GAT attention weights) can be scattered into the packed layout
+  on device;
+* DRHM shard plan (``dist_*``, via ``plan_distributed_spmm``) — the
+  ``distributed`` all-gather executor, again with scatter slots.
+
+``AggregationPlan`` is registered as a pytree (arrays are leaves, layout
+sizes / the mesh are static aux data), so plans pass through ``jax.jit``
+boundaries and can hold either concrete host-built arrays or tracers
+(``edge_plan`` builds a COO-only plan from traced edge arrays inside a model
+forward — enough for ``dense``/``chunked``; ``pallas``/``distributed`` need a
+host-built ``make_plan``).
+
+Conventions (same as everywhere else in the repo): ``rows`` are *receivers*
+(the accumulating side), ``cols`` are *senders*; ``n_rows`` is the padded
+node count **including** the ghost row, i.e. ``x.shape[0]``; padding edges
+carry ``valid == False`` and contribute nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+ALL_BACKENDS = ("dense", "chunked", "pallas", "distributed")
+
+
+class BackendPlanError(ValueError):
+    """A backend was asked to run on a plan missing its layout section."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationPlan:
+    """Precomputed per-graph layouts for every registered executor."""
+
+    # --- static layout sizes (pytree aux data) ---
+    n_rows: int                      # padded node count incl. ghost row
+    chunk: int = 8192                # rolling-eviction wave size
+    block_rows: int = 8              # blocked-ELL rows per block
+    n_blocks: int = 0
+    nnz_pad: int = 0
+    n_shards: int = 0
+    rows_per_shard: int = 0
+    edges_per_shard: int = 0
+    mesh: Optional[object] = None    # jax Mesh (hashable) for `distributed`
+
+    # --- COO section (always present; may hold tracers) ---
+    rows: Optional[Array] = None       # (E_pad,) int32 — receivers
+    cols: Optional[Array] = None       # (E_pad,) int32 — senders
+    valid: Optional[Array] = None      # (E_pad,) bool
+    base_vals: Optional[Array] = None  # (E_pad,) f32 — weight·valid
+
+    # --- blocked-ELL section (`pallas`) ---
+    ell_cols: Optional[Array] = None       # (n_blocks, nnz_pad) int32
+    ell_row_local: Optional[Array] = None  # (n_blocks, nnz_pad) int32
+    ell_vals: Optional[Array] = None       # (n_blocks, nnz_pad) f32
+    ell_remaining: Optional[Array] = None  # (n_blocks,) int32
+    ell_slots: Optional[Array] = None      # (E_pad,) int32; OOB ⇒ dropped
+
+    # --- DRHM shard section (`distributed`) ---
+    dist_rows_local: Optional[Array] = None  # (S*e_per,) int32
+    dist_cols_perm: Optional[Array] = None   # (S*e_per,) int32
+    dist_vals: Optional[Array] = None        # (S*e_per,) f32
+    dist_slots: Optional[Array] = None       # (E_pad,) int32; OOB ⇒ dropped
+    dist_perm: Optional[Array] = None        # (n_pad,) int32: row → slot
+    dist_inv_perm: Optional[Array] = None    # (n_pad,) int32: slot → row
+
+    def has(self, section: str) -> bool:
+        if section == "ell":
+            return self.ell_cols is not None
+        if section == "dist":
+            return self.dist_rows_local is not None and self.mesh is not None
+        return self.rows is not None
+
+    def require(self, section: str, backend: str) -> None:
+        if not self.has(section):
+            raise BackendPlanError(
+                f"backend {backend!r} needs the {section!r} plan section; "
+                f"build the plan with make_plan(..., backends=({backend!r},"
+                f" ...)) — inline edge_plan() covers only dense/chunked")
+
+    @property
+    def dist_n_pad(self) -> int:
+        return self.n_shards * self.rows_per_shard
+
+
+_LEAF_FIELDS = (
+    "rows", "cols", "valid", "base_vals",
+    "ell_cols", "ell_row_local", "ell_vals", "ell_remaining", "ell_slots",
+    "dist_rows_local", "dist_cols_perm", "dist_vals", "dist_slots",
+    "dist_perm", "dist_inv_perm",
+)
+_AUX_FIELDS = ("n_rows", "chunk", "block_rows", "n_blocks", "nnz_pad",
+               "n_shards", "rows_per_shard", "edges_per_shard", "mesh")
+
+
+def _plan_flatten(p: AggregationPlan):
+    return (tuple(getattr(p, f) for f in _LEAF_FIELDS),
+            tuple(getattr(p, f) for f in _AUX_FIELDS))
+
+
+def _plan_unflatten(aux, leaves):
+    return AggregationPlan(**dict(zip(_AUX_FIELDS, aux)),
+                           **dict(zip(_LEAF_FIELDS, leaves)))
+
+
+jax.tree_util.register_pytree_node(AggregationPlan, _plan_flatten,
+                                   _plan_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def edge_plan(senders: Array, receivers: Array, n_rows: int,
+              edge_weight: Optional[Array] = None,
+              edge_valid: Optional[Array] = None,
+              chunk: int = 8192) -> AggregationPlan:
+    """Trace-safe COO-only plan — what models build inline when no host plan
+    was provided.  Supports the ``dense`` and ``chunked`` executors."""
+    senders = jnp.asarray(senders)
+    receivers = jnp.asarray(receivers)
+    if edge_valid is None:
+        valid = jnp.ones(senders.shape, bool)
+    else:
+        valid = jnp.asarray(edge_valid)
+    if edge_weight is None:
+        base = valid.astype(jnp.float32)
+    else:
+        base = jnp.where(valid, jnp.asarray(edge_weight), 0.0)
+        base = base.astype(jnp.float32)
+    return AggregationPlan(n_rows=int(n_rows), chunk=chunk, rows=receivers,
+                           cols=senders, valid=valid, base_vals=base)
+
+
+def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
+              edge_weight: Optional[np.ndarray] = None,
+              edge_valid: Optional[np.ndarray] = None, *,
+              backends: Sequence[str] = ("dense", "chunked"),
+              chunk: int = 8192, block_rows: int = 8, nnz_multiple: int = 128,
+              mesh=None, gamma: int = 0x9E3779B1,
+              edge_pad_multiple: int = 8) -> AggregationPlan:
+    """Host-side plan: precompute every layout in ``backends`` once.
+
+    Only valid edges enter the pallas/distributed layouts; invalid (padding)
+    edges get an out-of-bounds scatter slot, so traced per-edge values on
+    padding lanes are dropped by construction.
+    """
+    for b in backends:
+        if b not in ALL_BACKENDS:
+            raise KeyError(f"unknown backend {b!r}; have {ALL_BACKENDS}")
+    s = np.asarray(senders, np.int32)
+    r = np.asarray(receivers, np.int32)
+    e = s.shape[0]
+    valid = (np.ones(e, bool) if edge_valid is None
+             else np.asarray(edge_valid, bool))
+    w = (np.ones(e, np.float32) if edge_weight is None
+         else np.asarray(edge_weight, np.float32))
+    base = np.where(valid, w, 0.0).astype(np.float32)
+    vidx = np.nonzero(valid)[0]
+    kw = dict(n_rows=int(n_rows), chunk=chunk,
+              rows=jnp.asarray(r), cols=jnp.asarray(s),
+              valid=jnp.asarray(valid), base_vals=jnp.asarray(base))
+
+    if "pallas" in backends:
+        from repro.sparse.graph import pack_blocked_ell
+        ell = pack_blocked_ell(r[vidx], s[vidx], base[vidx], int(n_rows),
+                               int(n_rows), block_rows=block_rows,
+                               nnz_multiple=nnz_multiple)
+        slots = np.full(e, ell.n_blocks * ell.nnz_pad, np.int32)
+        slots[vidx] = ell.slots
+        kw.update(block_rows=block_rows, n_blocks=ell.n_blocks,
+                  nnz_pad=ell.nnz_pad,
+                  ell_cols=jnp.asarray(ell.cols),
+                  ell_row_local=jnp.asarray(ell.row_local),
+                  ell_vals=jnp.asarray(ell.vals),
+                  ell_remaining=jnp.asarray(ell.remaining),
+                  ell_slots=jnp.asarray(slots))
+
+    if "distributed" in backends:
+        from repro.core.distributed import plan_distributed_spmm
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        n_shards = int(mesh.shape["data"])
+        dp = plan_distributed_spmm(r[vidx], s[vidx], base[vidx], int(n_rows),
+                                   n_shards=n_shards, gamma=gamma,
+                                   edge_pad_multiple=edge_pad_multiple)
+        slots = np.full(e, dp.n_shards * dp.edges_per_shard, np.int32)
+        slots[vidx] = dp.slots
+        kw.update(mesh=mesh, n_shards=dp.n_shards,
+                  rows_per_shard=dp.rows_per_shard,
+                  edges_per_shard=dp.edges_per_shard,
+                  dist_rows_local=jnp.asarray(dp.rows_local),
+                  dist_cols_perm=jnp.asarray(dp.cols_perm),
+                  dist_vals=jnp.asarray(dp.vals),
+                  dist_slots=jnp.asarray(slots),
+                  dist_perm=jnp.asarray(dp.perm.astype(np.int32)),
+                  dist_inv_perm=jnp.asarray(dp.inv_perm.astype(np.int32)))
+
+    return AggregationPlan(**kw)
+
+
+def plan_from_graph(g, *, n_rows: Optional[int] = None,
+                    **kwargs) -> AggregationPlan:
+    """Plan for a padded ``Graph``.  ``n_rows`` defaults to ``n_nodes + 1``
+    (the ghost-row convention: features carry one extra padding row)."""
+    n = int(n_rows) if n_rows is not None else g.n_nodes + 1
+    return make_plan(np.asarray(g.senders), np.asarray(g.receivers), n,
+                     edge_weight=(None if g.edge_weight is None
+                                  else np.asarray(g.edge_weight)),
+                     edge_valid=np.asarray(g.edge_valid), **kwargs)

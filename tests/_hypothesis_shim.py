@@ -1,0 +1,62 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The property tests in this repo only use ``@given``/``@settings`` with the
+``integers`` / ``lists`` / ``sampled_from`` strategies, so a tiny shim keeps
+them *running* (seeded random sampling, ``max_examples`` draws) instead of
+skipping on machines without the real package.  ``requirements-dev.txt``
+installs real hypothesis for CI; test files import this as a fallback only.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(k)]
+    return _Strategy(draw)
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+class st:  # namespace mirror of hypothesis.strategies
+    integers = staticmethod(_integers)
+    lists = staticmethod(_lists)
+    sampled_from = staticmethod(_sampled_from)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy-filled parameters (it would treat them as
+        # fixtures).
+        def wrapper():
+            n = getattr(fn, "_shim_max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

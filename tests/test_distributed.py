@@ -11,6 +11,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import distributed
+from repro.core.compat import shard_map, use_mesh
 
 rng = np.random.default_rng(1)
 n, e, d = 96, 700, 32
@@ -26,14 +27,14 @@ plan = distributed.plan_distributed_spmm(rows, cols, vals, n, n_shards=4,
 xp = distributed.permute_features(x, plan)
 
 f = distributed.make_allgather_spmm(mesh, plan)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     y = f(jnp.asarray(xp), jnp.asarray(plan.rows_local),
           jnp.asarray(plan.cols_perm), jnp.asarray(plan.vals))
 err = abs(distributed.unpermute_features(np.asarray(y), plan, n) - ref).max()
 assert err < 1e-4, f"allgather spmm err {err}"
 
 g = distributed.make_ring_spmm(mesh, plan)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     y2 = g(jnp.asarray(xp), jnp.asarray(plan.ring_rows),
            jnp.asarray(plan.ring_cols), jnp.asarray(plan.ring_vals))
 err2 = abs(distributed.unpermute_features(np.asarray(y2), plan, n) - ref).max()
@@ -47,7 +48,7 @@ def loss_ring(xp_):
     return jnp.sum(g(xp_, jnp.asarray(plan.ring_rows),
                      jnp.asarray(plan.ring_cols),
                      jnp.asarray(plan.ring_vals))**2)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     g1 = jax.grad(loss_ag)(jnp.asarray(xp))
     g2 = jax.grad(loss_ring)(jnp.asarray(xp))
 gerr = float(jnp.abs(g1 - g2).max())
@@ -64,9 +65,9 @@ def ps(z):
 def cps(z):
     return compressed_psum(z, "data")
 z = rng.normal(size=(8, 64)).astype(np.float32)
-sm_ps = jax.shard_map(ps, mesh=mesh, in_specs=P("data"), out_specs=P())
-sm_cps = jax.shard_map(cps, mesh=mesh, in_specs=P("data"), out_specs=P())
-with jax.set_mesh(mesh):
+sm_ps = shard_map(ps, mesh=mesh, in_specs=P("data"), out_specs=P())
+sm_cps = shard_map(cps, mesh=mesh, in_specs=P("data"), out_specs=P())
+with use_mesh(mesh):
     a = sm_ps(jnp.asarray(z))
     b = sm_cps(jnp.asarray(z))
 cerr = float(jnp.abs(a - b).max() / (jnp.abs(a).max() + 1e-9))

@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback; requirements-dev.txt has the real one
+    from _hypothesis_shim import given, settings, st
 
 from repro.models.lm import transformer as T
 

@@ -1,8 +1,11 @@
 """Neighbor sampler: static shapes, valid endpoints, determinism."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback; requirements-dev.txt has the real one
+    from _hypothesis_shim import given, settings, st
 
 from repro.sparse import sampler
 from repro.sparse.graph import coo_to_csr

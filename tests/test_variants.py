@@ -17,6 +17,7 @@ import dataclasses
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs import registry
 from repro.core import distributed
+from repro.core.compat import use_mesh
 from repro.launch import variants
 from repro.models.gnn import gcn
 from repro.optim import adamw
@@ -55,7 +56,7 @@ batch = {"x_perm": jnp.asarray(xp), "labels_perm": jnp.asarray(yp),
 step = variants.build_gcn_drhm_step(cfg, mesh, plan.n_pad, ring=False,
                                     opt_cfg=adamw.AdamWConfig(lr=1e-2))
 opt = adamw.init_state(params)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     new_p, new_o, metrics = jax.jit(step)(params, opt, batch)
 err = abs(float(metrics["loss"]) - float(ref_loss))
 assert err < 1e-4, f"DRHM step loss mismatch: {err}"

@@ -2,14 +2,21 @@
 benchmark behind ``BENCH_backends.json``.
 
 One identical graph per size point; every registered executor (selected by
-config string) is timed on ``aggregate`` and on a full GCN forward, and the
-numeric deviation against the ``dense`` reference is recorded so the JSON
-doubles as a parity check.  ``benchmarks/run.py`` writes the collected
-records to ``BENCH_backends.json`` so the trajectory is tracked per PR.
+config string) is timed on ``aggregate`` (forward, and forward+backward at
+the flagship size), plus a D-sweep over the feature width and a full GCN
+forward.  Numeric deviation against the ``dense`` reference is recorded so
+the JSON doubles as a parity check, and every record carries
+``speedup_vs_dense``.  Timings are median-of-k with explicit warmup (compile
+excluded).  ``python -m benchmarks.backend_sweep --check`` gates on parity
+(CI's benchmark smoke); ``--json PATH`` writes the records atomically.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import os
+import tempfile
 import time
 
 import jax
@@ -24,17 +31,27 @@ from repro.sparse.plan import make_plan
 
 BACKENDS = sparse_backend.ALL_BACKENDS
 SIZES = ((1024, 4096, 32), (4096, 16384, 64))   # (n, e, d)
+D_SWEEP = (16, 64, 256)                         # feature widths at n=4096
+FWDBWD_SIZE = (4096, 16384, 64)                 # flagship fwd+bwd point
+PARITY_TOL = 1e-4
+# PR-1 flagship pallas aggregate (n=4096/e=16384/d=64) — the "before" of the
+# PR-2 kernel rewrite; kept in the JSON so the trajectory shows the jump
+PR1_PALLAS_BASELINE_US = 114550.3
 
 _CACHE = None
 
 
-def _timeit(fn, *args, n=5):
-    fn(*args).block_until_ready()
-    t0 = time.time()
+def timeit(fn, *args, n=5, warmup=2):
+    """Median-of-n wall time in µs, after `warmup` discarded calls (the
+    first of which absorbs compilation).  Shared by every benchmark module."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
     for _ in range(n):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.time() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
 
 
 def sweep_aggregate(plan, x, backends=BACKENDS):
@@ -46,32 +63,95 @@ def sweep_aggregate(plan, x, backends=BACKENDS):
         fn = jax.jit(lambda xx, nm=name: sparse_backend.aggregate(
             plan, None, xx, backend=nm))
         dev = float(jnp.abs(ref - fn(x)).max())
-        rows.append((name, _timeit(fn, x), dev))
+        rows.append((name, timeit(fn, x), dev))
     return rows
 
 
+def sweep_aggregate_fwdbwd(plan, x, backends=BACKENDS):
+    """Forward+backward (grad wrt vals and x) per backend — the training
+    path; the pallas backward runs dX = Aᵀ·dY through the Pallas kernel."""
+    v0 = jnp.ones_like(plan.base_vals)
+
+    def loss(v, xx, nm):
+        # mean (not sum) keeps gradient magnitudes O(1), so the recorded
+        # absolute deviation is comparable to the forward records
+        return jnp.mean(sparse_backend.aggregate(plan, v, xx, backend=nm)**2)
+
+    ref = jax.grad(loss, argnums=(0, 1))(v0, x, "dense")
+    rows = []
+    for name in backends:
+        fn = jax.jit(lambda v, xx, nm=name: jax.grad(
+            loss, argnums=(0, 1))(v, xx, nm))
+        out = fn(v0, x)
+        dev = max(float(jnp.abs(ref[0] - out[0]).max()),
+                  float(jnp.abs(ref[1] - out[1]).max()))
+        rows.append((name, timeit(fn, v0, x), dev))
+    return rows
+
+
+def _record(kind, name, n, e, d, us, dev):
+    return {"kind": kind, "backend": name, "n": n, "e": e, "d": d,
+            "us_per_call": round(us, 1), "max_abs_dev_vs_dense": dev}
+
+
+def _with_speedups(records):
+    """Attach speedup_vs_dense to every record (dense itself gets 1.0)."""
+    dense = {(r["kind"], r["n"], r["e"], r["d"]): r["us_per_call"]
+             for r in records if r["backend"] == "dense"}
+    for r in records:
+        base = dense.get((r["kind"], r["n"], r["e"], r["d"]))
+        if base:
+            r["speedup_vs_dense"] = round(base / r["us_per_call"], 3)
+        if (r["kind"], r["backend"]) == ("aggregate", "pallas") and \
+                (r["n"], r["e"], r["d"]) == FWDBWD_SIZE:
+            r["pr1_us_per_call"] = PR1_PALLAS_BASELINE_US
+            r["speedup_vs_pr1"] = round(PR1_PALLAS_BASELINE_US
+                                        / r["us_per_call"], 1)
+    return records
+
+
+def _sized_inputs(n, e, d):
+    rng = np.random.default_rng(n)
+    s, r = powerlaw_graph(n, e + 256, seed=n)
+    s, r = s[:e], r[:e]
+    vals = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    plan = make_plan(s, r, n, edge_weight=vals,
+                     backends=sparse_backend.ALL_BACKENDS,
+                     chunk=min(4096, e))
+    return plan, x
+
+
 def collect():
-    """Records: aggregate + GCN-forward per (backend × size), with parity."""
+    """Records: aggregate (+fwd/bwd, +D-sweep) and GCN-forward per
+    (backend × size), with parity and speedup-vs-dense."""
     global _CACHE
     if _CACHE is not None:
         return _CACHE
     records = []
+    plans = {}
     for n, e, d in SIZES:
-        rng = np.random.default_rng(n)
-        s, r = powerlaw_graph(n, e + 256, seed=n)
-        s, r = s[:e], r[:e]
-        vals = rng.normal(size=e).astype(np.float32)
+        plans[(n, e, d)], x = _sized_inputs(n, e, d)
+        for name, us, dev in sweep_aggregate(plans[(n, e, d)], x):
+            records.append(_record("aggregate", name, n, e, d, us, dev))
+    # D-sweep: same flagship graph, growing feature width (tests the
+    # kernel's feature tiling, not just one lane width)
+    n, e, _ = FWDBWD_SIZE
+    for d in D_SWEEP:
+        if (n, e, d) in plans:
+            continue
+        rng = np.random.default_rng(d)
         x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
-        plan = make_plan(s, r, n, edge_weight=vals,
-                         backends=sparse_backend.ALL_BACKENDS,
-                         chunk=min(4096, e))
+        plan = plans.get(FWDBWD_SIZE) or _sized_inputs(n, e, d)[0]
         for name, us, dev in sweep_aggregate(plan, x):
-            records.append({
-                "kind": "aggregate", "backend": name,
-                "n": n, "e": e, "d": d,
-                "us_per_call": round(us, 1),
-                "max_abs_dev_vs_dense": dev,
-            })
+            records.append(_record("aggregate", name, n, e, d, us, dev))
+    # forward+backward at the flagship size — the training path
+    n, e, d = FWDBWD_SIZE
+    rng = np.random.default_rng(e)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    for name, us, dev in sweep_aggregate_fwdbwd(plans[(n, e, d)], x):
+        records.append(_record("aggregate_fwdbwd", name, n, e, d, us, dev))
+
     # GCN forward on a Cora-sized graph, one plan, every executor
     n = 1024
     rng = np.random.default_rng(7)
@@ -88,23 +168,66 @@ def collect():
         fn = jax.jit(lambda xx, nm=name: gcn.forward(params, cfg, xx,
                                                      backend=nm, plan=plan))
         dev = float(jnp.abs(ref - fn(x)).max())
-        records.append({
-            "kind": "gcn_forward", "backend": name,
-            "n": n, "e": 4096, "d": cfg.d_in,
-            "us_per_call": round(_timeit(fn, x), 1),
-            "max_abs_dev_vs_dense": dev,
-        })
-    _CACHE = records
-    return records
+        records.append(_record("gcn_forward", name, n, 4096, cfg.d_in,
+                               timeit(fn, x), dev))
+    _CACHE = _with_speedups(records)
+    return _CACHE
 
 
-def main():
-    print("# per-backend sweep (CPU wall-time; relative only)")
-    print("name,us_per_call,derived")
-    for rec in collect():
-        print(f"{rec['kind']}_{rec['backend']},{rec['us_per_call']:.0f},"
-              f"n={rec['n']};e={rec['e']};d={rec['d']};"
-              f"dev={rec['max_abs_dev_vs_dense']:.2e}")
+def write_json(path, records):
+    """Atomic write: the trajectory artifact is never left half-written."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".bench_", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(records, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def check_parity(records, tol=PARITY_TOL):
+    """→ list of records whose deviation vs dense exceeds `tol`.  NaN/Inf
+    deviations (a backend emitting garbage) must fail, not slip through a
+    `>` comparison that is False for NaN."""
+    return [r for r in records if not (r["max_abs_dev_vs_dense"] <= tol)]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail if any backend deviates from dense by more "
+                         f"than {PARITY_TOL}")
+    ap.add_argument("--check-json", default=None, metavar="PATH",
+                    help="parity-gate an already-written records file "
+                         "(no re-collection; CI gates benchmarks.run output)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the records to PATH (atomically)")
+    args = ap.parse_args(argv)
+    if args.check_json:
+        with open(args.check_json) as f:
+            records = json.load(f)
+    else:
+        records = collect()
+        print("# per-backend sweep (CPU wall-time; relative only)")
+        print("name,us_per_call,derived")
+        for rec in records:
+            speed = rec.get("speedup_vs_dense", float("nan"))
+            print(f"{rec['kind']}_{rec['backend']},{rec['us_per_call']:.0f},"
+                  f"n={rec['n']};e={rec['e']};d={rec['d']};"
+                  f"dev={rec['max_abs_dev_vs_dense']:.2e};x_dense={speed:.2f}")
+    if args.json:
+        write_json(args.json, records)
+        print(f"wrote {args.json}")
+    if args.check or args.check_json:
+        bad = check_parity(records)
+        for r in bad:
+            print(f"PARITY FAIL: {r}")
+        if bad:
+            raise SystemExit(1)
+        print(f"parity OK: all deviations <= {PARITY_TOL}")
 
 
 if __name__ == "__main__":

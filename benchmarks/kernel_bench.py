@@ -5,12 +5,11 @@ Pallas — relative numbers only; TPU is the compile target.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.backend_sweep import timeit as _bs_timeit
 from benchmarks.backend_sweep import sweep_aggregate
 from repro.core import spgemm
 from repro.data.synthetic import powerlaw_graph
@@ -19,12 +18,8 @@ from repro.sparse.plan import make_plan
 
 
 def timeit(fn, *args, n=5):
-    fn(*args).block_until_ready()
-    t0 = time.time()
-    for _ in range(n):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.time() - t0) / n * 1e6
+    # median-of-n with explicit warmup — same policy as backend_sweep
+    return _bs_timeit(fn, *args, n=n)
 
 
 def backend_rows(n=2048, e=8192, d=64, seed=1):

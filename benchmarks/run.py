@@ -46,8 +46,7 @@ def main() -> None:
             print(f"### {name} FAILED")
             traceback.print_exc()
     try:  # per-backend perf trajectory, tracked from PR 1 onward
-        with open(BACKENDS_JSON, "w") as f:
-            json.dump(backend_sweep.collect(), f, indent=1)
+        backend_sweep.write_json(BACKENDS_JSON, backend_sweep.collect())
         print(f"\nwrote {BACKENDS_JSON}")
     except Exception:  # noqa: BLE001
         failures += 1

@@ -1,23 +1,41 @@
 """Gustavson SpMM Pallas TPU kernel — the paper's MMH4/HACC pipeline as a
-VMEM-tiled gather-multiply-accumulate with rolling eviction.
+VMEM-tiled gather–multiply–accumulate with rolling eviction.
 
-TPU adaptation of the NeuraChip dataflow (DESIGN.md §2.1):
+TPU adaptation of the NeuraChip dataflow (DESIGN.md §2.1), operating on the
+operand-deduplicated chunk layout (``repro.sparse.graph.pack_dedup_chunks``):
 
-* multiply stage (NeuraCore ≙ MMH4): per nnz, the source row of X is DMA'd
-  from HBM into a VMEM landing slot (double-buffered, so the next row's DMA
-  overlaps the current row's FMA) and scaled by the edge value;
-* accumulate stage (NeuraMem ≙ HACC): the partial product folds into a
-  (block_rows × D) VMEM accumulator tile — the HashPad analogue.  The CAM tag
-  match degenerates to a direct sublane index because edges were host-sorted
-  by destination row (pack_blocked_ell);
-* rolling eviction: the per-block completion counter ``remaining[b]`` is the
-  loop bound; the moment the last real nnz is folded the tile is evicted
-  (written back) to HBM and the next block's accumulation begins.  Padding
-  lanes are never touched — counters make the bloat window exactly one tile.
+* **multiply stage** (NeuraCore ≙ MMH4): a chunk's distinct source rows of X
+  are brought into a ``(width, d_tile)`` VMEM landing buffer.  Under
+  ``gather="dma"`` the kernel row-gathers them straight from X in HBM — in
+  waves of ``group`` rows, one ``pltpu.make_async_copy`` + semaphore per
+  landing lane, every wave in flight before the first wait (a pipeline as
+  deep as the landing buffer).  Under ``gather="stream"`` the operands were
+  pre-gathered by one vectorized XLA gather into a chunk-contiguous slab,
+  and the kernel lands each chunk's slab with a single strided DMA.  Each
+  edge value sits in a dense ``(block_rows, width)`` **coefficient tile** —
+  the chunk's stacked one-hot matrices — so the whole chunk folds in one
+  MXU matmul: ``contrib = A_chunk @ landing``;
+* **accumulate stage** (NeuraMem ≙ HACC): the coefficient tile routes every
+  partial product to its destination sublane of the ``(block_rows, d_tile)``
+  output tile — the HashPad analogue.  The CAM tag match degenerated into
+  the tile's row index at pack time (edges host-sorted by destination row);
+* **rolling eviction**: ``remaining[k]`` (the distinct-operand counter)
+  bounds the DMA wave loop; once the chunk's last operand lands and folds,
+  the tile is evicted.  Oversized blocks were split into several chunks at
+  pack time — later chunks *revisit* their output block and accumulate into
+  the still-resident tile (``first[k]`` selects overwrite vs accumulate), so
+  one power-law hub row never inflates every block's padding.
 
-Layout: grid = (n_blocks,).  cols/row_local live in SMEM via scalar prefetch
-(PrefetchScalarGridSpec); X stays in ANY/HBM and is row-gathered by explicit
-``pltpu.make_async_copy``; the accumulator and landing slots are VMEM scratch.
+Layout: grid = ``(d_tiles, n_chunks)`` — the feature axis is tiled so D never
+has to fit one VMEM lane-width and large-D models get grid parallelism; the
+chunk axis is innermost so chunks of one output block stay consecutive and
+the revisited output tile stays resident.  u_cols/remaining/out_block/first
+live in SMEM via scalar prefetch — the *output* BlockSpec index map reads
+``out_block`` to route each chunk's tile.  The coefficient tiles and X (or
+the streamed operand slab) stay in ANY/HBM and are fetched by explicit DMA:
+exactly one ``(block_rows, width)`` tile and one chunk's operands per grid
+step — never whole arrays (the old layout re-copied the full vals array
+every step: O(n_blocks²·nnz_pad) operand traffic).
 
 Validated with interpret=True on CPU against ref.py; TPU is the target.
 """
@@ -30,79 +48,201 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-N_SLOTS = 2  # double-buffered landing slots for the row DMA pipeline
+DEFAULT_GROUP = 8        # landing-buffer rows per DMA wave (MMH4 lane count)
+MAX_SINGLE_TILE_D = 512  # auto d_tile: keep one feature tile up to this width
 
 
-def _kernel(cols_smem, rloc_smem, rem_smem, vals_ref, x_hbm, y_ref,
-            acc_ref, slot_ref, sems, *, nnz_pad: int, block_rows: int):
-    b = pl.program_id(0)
-    acc_ref[...] = jnp.zeros_like(acc_ref)
-    n_real = rem_smem[b]                      # rolling-eviction counter
+def _fold(a_ref, first_smem, y_ref, land, k):
+    """Accumulate stage: one MXU matmul folds the whole chunk; revisits of
+    the same output block accumulate into the still-resident tile."""
+    contrib = jax.lax.dot(a_ref[...].astype(land.dtype), land,
+                          preferred_element_type=jnp.float32)
+    contrib = contrib.astype(y_ref.dtype)
+    is_first = first_smem[k] != 0
+    y_ref[...] = jnp.where(is_first, contrib, y_ref[...] + contrib)
 
-    def start_dma(i):
-        c = cols_smem[b, i]
-        copy = pltpu.make_async_copy(
-            x_hbm.at[c], slot_ref.at[i % N_SLOTS], sems.at[i % N_SLOTS])
-        copy.start()
-        return copy
 
-    # warm-up: first DMA in flight
-    @pl.when(n_real > 0)
-    def _():
-        start_dma(0)
+def _start_a_tile(a_hbm, a_ref, sem, k, block_rows):
+    return pltpu.make_async_copy(
+        a_hbm.at[pl.dslice(k * block_rows, block_rows), :], a_ref, sem)
 
-    def body(i, _):
-        # wait for row i's landing slot, then immediately launch row i+1
-        pltpu.make_async_copy(
-            x_hbm.at[cols_smem[b, i]], slot_ref.at[i % N_SLOTS],
-            sems.at[i % N_SLOTS]).wait()
 
-        @pl.when(i + 1 < n_real)
-        def _():
-            start_dma(i + 1)
+def _kernel_dma(u_cols_smem, rem_smem, ob_smem, first_smem, a_hbm, x_hbm,
+                y_ref, a_ref, land_ref, sems, *, block_rows: int, group: int,
+                d_tile: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    col0 = j * d_tile
+    a_cp = _start_a_tile(a_hbm, a_ref, sems.at[0], k, block_rows)
+    a_cp.start()
+    n_u = rem_smem[k]                        # rolling-eviction counter
+    n_waves = (n_u + group - 1) // group
+    # zero the landing buffer: lanes no DMA wave touches must fold as exact
+    # zeros (the coefficient tile is zero there, but 0·garbage could be NaN)
+    land_ref[...] = jnp.zeros_like(land_ref)
 
-        # multiply stage: partial product = v * X[row]
-        v = vals_ref[b, i]
-        pp = slot_ref[i % N_SLOTS, :] * v
-        # accumulate stage: fold into the HashPad tile at the local row
-        r = rloc_smem[b, i]
-        cur = pl.load(acc_ref, (pl.dslice(r, 1), slice(None)))
-        pl.store(acc_ref, (pl.dslice(r, 1), slice(None)), cur + pp[None, :])
+    def wave_copies(w):
+        return [pltpu.make_async_copy(
+                    x_hbm.at[u_cols_smem[k, w * group + t],
+                             pl.dslice(col0, d_tile)],
+                    land_ref.at[w * group + t], sems.at[1 + w * group + t])
+                for t in range(group)]
+
+    def start_wave(w, _):
+        for c in wave_copies(w):
+            c.start()
         return 0
 
-    jax.lax.fori_loop(0, n_real, body, 0)
-    # eviction: counter exhausted → write the tile back to HBM
-    y_ref[...] = acc_ref[...]
+    def wait_wave(w, _):
+        for c in wave_copies(w):
+            c.wait()
+        return 0
+
+    # multiply stage: every wave's DMAs go in flight before the first wait —
+    # the pipeline is as deep as the landing buffer (n_waves × group lanes)
+    jax.lax.fori_loop(0, n_waves, start_wave, 0)
+    jax.lax.fori_loop(0, n_waves, wait_wave, 0)
+    a_cp.wait()
+    _fold(a_ref, first_smem, y_ref, land_ref[...], k)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def spmm_blocked_ell(cols: jax.Array, row_local: jax.Array, vals: jax.Array,
-                     remaining: jax.Array, x: jax.Array,
-                     block_rows: int = 8, interpret: bool = True) -> jax.Array:
-    """cols/row_local/vals: (n_blocks, nnz_pad) int32/int32/f32;
-    remaining: (n_blocks,) int32; x: (N, D) f32 → (n_blocks·block_rows, D)."""
-    n_blocks, nnz_pad = cols.shape
+def _kernel_stream(u_cols_smem, rem_smem, ob_smem, first_smem, a_hbm,
+                   land_hbm, y_ref, a_ref, land_ref, sems, *,
+                   block_rows: int, width: int, d_tile: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    a_cp = _start_a_tile(a_hbm, a_ref, sems.at[0], k, block_rows)
+    a_cp.start()
+    land_cp = pltpu.make_async_copy(
+        land_hbm.at[pl.dslice(k * width, width),
+                    pl.dslice(j * d_tile, d_tile)], land_ref, sems.at[1])
+    land_cp.start()
+    a_cp.wait()
+    land_cp.wait()
+    _fold(a_ref, first_smem, y_ref, land_ref[...], k)
+
+
+def _auto_d_tile(d: int) -> int:
+    """Single tile up to MAX_SINGLE_TILE_D; beyond that, the smallest even
+    split (8-lane aligned) — a fixed 512 would pad D=576 to 1024.  TPU
+    callers wanting exact 128-lane tiles pass ``d_tile`` explicitly."""
+    if d <= MAX_SINGLE_TILE_D:
+        return d
+    n_tiles = -(-d // MAX_SINGLE_TILE_D)
+    per_tile = -(-d // n_tiles)
+    return -(-per_tile // 8) * 8
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "n_blocks",
+                                             "group", "d_tile", "gather",
+                                             "interpret"))
+def spmm_dedup_chunks(u_cols: jax.Array, remaining: jax.Array,
+                      out_block: jax.Array, first: jax.Array, a: jax.Array,
+                      x: jax.Array, *, block_rows: int, n_blocks: int,
+                      group: int = DEFAULT_GROUP, d_tile: int | None = None,
+                      gather: str = "auto",
+                      interpret: bool = True) -> jax.Array:
+    """Chunked-dedup Gustavson SpMM:  y = A @ X on the packed layout.
+
+    u_cols: (n_chunks, width) int32; remaining/out_block/first: (n_chunks,)
+    int32; a: (n_chunks·block_rows, width) f32; x: (N, D) →
+    (n_blocks·block_rows, D) in ``x.dtype`` (f32 accumulation per chunk).
+
+    ``gather="dma"`` row-gathers X inside the kernel (explicit async copies —
+    the TPU path, no operand materialization); ``"stream"`` pre-gathers the
+    operands with one vectorized XLA gather and slab-DMAs each chunk (the
+    fast path under interpret, where per-row copy emulation dominates);
+    ``"auto"`` picks by backend.
+    """
+    n_chunks, width = u_cols.shape
     d = x.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,        # cols, row_local, remaining
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((n_blocks, nnz_pad), lambda b, *_: (0, 0)),  # vals
-            pl.BlockSpec(memory_space=pltpu.ANY),                     # x (HBM)
-        ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda b, *_: (b, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((block_rows, d), jnp.float32),    # accumulator tile
-            pltpu.VMEM((N_SLOTS, d), jnp.float32),       # DMA landing slots
-            pltpu.SemaphoreType.DMA((N_SLOTS,)),
-        ],
-    )
-    kernel = functools.partial(_kernel, nnz_pad=nnz_pad,
-                               block_rows=block_rows)
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, d),
-                                       jnp.float32),
-        interpret=interpret,
-    )(cols, row_local, remaining, vals, x)
+    if gather == "auto":
+        gather = "dma" if jax.default_backend() == "tpu" else "stream"
+    if d_tile is None:
+        d_tile = _auto_d_tile(d)
+    d_pad = (-d) % d_tile
+    if d_pad:
+        x = jnp.pad(x, ((0, 0), (0, d_pad)))
+    d_tiles = (d + d_pad) // d_tile
+    if gather == "dma":
+        # wave padding: DMA waves copy whole lanes-of-`group`
+        lane_pad = (-width) % group
+        if lane_pad:
+            u_cols = jnp.pad(u_cols, ((0, 0), (0, lane_pad)))
+            a = jnp.pad(a, ((0, 0), (0, lane_pad)))
+            width += lane_pad
+
+    out_shape = jax.ShapeDtypeStruct((n_blocks * block_rows,
+                                      d_tiles * d_tile), x.dtype)
+    # grid: feature tiles outer, chunks inner — chunks of one output block
+    # stay consecutive, so the revisited output tile is still resident
+    out_spec = pl.BlockSpec((block_rows, d_tile),
+                            lambda j, k, uc, re, ob, fi: (ob[k], j))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    if gather == "dma":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,    # u_cols, remaining, out_block, first
+            grid=(d_tiles, n_chunks),
+            in_specs=[any_spec, any_spec],           # a, x (HBM)
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((block_rows, width), a.dtype),   # coeff tile
+                pltpu.VMEM((width, d_tile), x.dtype),       # landing buffer
+                pltpu.SemaphoreType.DMA((1 + width,)),
+            ],
+        )
+        kernel = functools.partial(_kernel_dma, block_rows=block_rows,
+                                   group=group, d_tile=d_tile)
+        operand = x
+    else:
+        # multiply-stage gather hoisted to one vectorized XLA gather; each
+        # chunk's operand slab is contiguous → one strided DMA per step
+        operand = jnp.take(x, u_cols.reshape(-1), axis=0)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(d_tiles, n_chunks),
+            in_specs=[any_spec, any_spec],           # a, operand slab (HBM)
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((block_rows, width), a.dtype),
+                pltpu.VMEM((width, d_tile), x.dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        kernel = functools.partial(_kernel_stream, block_rows=block_rows,
+                                   width=width, d_tile=d_tile)
+    y = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                       interpret=interpret)(
+        u_cols, remaining, out_block, first, a, operand)
+    return y[:, :d] if d_pad else y
+
+
+def spmm_blocked_ell(cols, row_local, vals, remaining, x,
+                     block_rows: int = 8, interpret: bool = True,
+                     group: int = DEFAULT_GROUP, d_tile: int | None = None,
+                     gather: str = "auto") -> jax.Array:
+    """Per-lane blocked-ELL compatibility entry (host-side inputs only).
+
+    Repacks the lane layout into dedup chunks (host, per call — use the plan
+    layer to pack once) and runs the kernel.  Kept so existing call sites and
+    the ref oracle's layout contract stay valid.
+    """
+    import numpy as np
+    cols = np.asarray(cols)
+    row_local = np.asarray(row_local)
+    vals = np.asarray(vals)
+    remaining = np.asarray(remaining)
+    n_blocks, nnz_pad = cols.shape
+    lane = np.arange(nnz_pad)[None, :]
+    live = lane < remaining[:, None]
+    b_idx = np.nonzero(live)[0]
+    rows_g = row_local[live] + b_idx * block_rows
+    from repro.sparse.graph import pack_dedup_chunks
+    ch = pack_dedup_chunks(rows_g, cols[live], vals[live],
+                           n_blocks * block_rows, int(x.shape[0]),
+                           block_rows=block_rows)
+    return spmm_dedup_chunks(
+        jnp.asarray(ch.u_cols), jnp.asarray(ch.remaining),
+        jnp.asarray(ch.out_block), jnp.asarray(ch.first), jnp.asarray(ch.a),
+        x, block_rows=block_rows, n_blocks=n_blocks, group=group,
+        d_tile=d_tile, gather=gather, interpret=interpret)

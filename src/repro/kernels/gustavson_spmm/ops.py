@@ -1,11 +1,14 @@
 """Public wrappers for the Pallas Gustavson SpMM kernel.
 
-``spmm`` — COO → blocked-ELL → kernel, packing host-side once per call.
-``spmm_blocked_ell_grad`` — the kernel with a custom VJP so it is usable as a
-production *training* path: the forward pass runs the Pallas pipeline, the
-backward pass is the transpose SpMM expressed in plain JAX (dX = Aᵀ·dY via
-segment-sum over source rows; dvals = per-nnz ⟨X row, dY row⟩), which keeps
-the decoupled multiply/accumulate structure in both directions.
+``spmm`` — COO → dedup-chunk layout → kernel, packing host-side once per
+call.  ``spmm_dedup_grad`` — the kernel with a custom VJP so it is usable as
+a production *training* path: the forward pass runs the Pallas pipeline and
+the backward pass runs **the same Pallas kernel** on the transpose chunk
+layout (dX = Aᵀ·dY — no plain-JAX segment reduction anywhere), while the
+coefficient-tile cotangent dA comes from the grouped operand gather the
+forward already performs (dA[k] = dY_block(k) · landing(k)ᵀ).  Gradients for
+traced edge values (GAT attention) flow through the device scatter that
+builds the coefficient tiles, outside this op.
 """
 from __future__ import annotations
 
@@ -15,9 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_blocked_ell
-from repro.kernels.gustavson_spmm.ref import spmm_blocked_ell_ref
-from repro.sparse.graph import pack_blocked_ell
+from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_dedup_chunks
 
 
 def is_tpu() -> bool:
@@ -29,58 +30,89 @@ def _float0_zeros(a: jax.Array):
     return np.zeros(a.shape, dtype=jax.dtypes.float0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _spmm_blocked_ell_ad(block_rows, interpret, cols, row_local, vals,
-                         remaining, x):
-    return spmm_blocked_ell(cols, row_local, vals, remaining, x,
-                            block_rows=block_rows, interpret=interpret)
+# statics = (block_rows, n_blocks, n_t_blocks, group, d_tile, gather,
+#            interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmm_dedup_ad(statics, u_cols, remaining, out_block, first, a,
+                   t_u_cols, t_remaining, t_out_block, t_first, a_t, x):
+    block_rows, n_blocks, _, group, d_tile, gather, interpret = statics
+    return spmm_dedup_chunks(u_cols, remaining, out_block, first, a, x,
+                             block_rows=block_rows, n_blocks=n_blocks,
+                             group=group, d_tile=d_tile, gather=gather,
+                             interpret=interpret)
 
 
-def _ad_fwd(block_rows, interpret, cols, row_local, vals, remaining, x):
-    y = _spmm_blocked_ell_ad(block_rows, interpret, cols, row_local, vals,
-                             remaining, x)
-    return y, (cols, row_local, vals, remaining, x)
+def _ad_fwd(statics, u_cols, remaining, out_block, first, a,
+            t_u_cols, t_remaining, t_out_block, t_first, a_t, x):
+    y = _spmm_dedup_ad(statics, u_cols, remaining, out_block, first, a,
+                       t_u_cols, t_remaining, t_out_block, t_first, a_t, x)
+    return y, (u_cols, remaining, out_block, first,
+               t_u_cols, t_remaining, t_out_block, t_first, a_t, x)
 
 
-def _ad_bwd(block_rows, interpret, res, dy):
-    cols, row_local, vals, remaining, x = res
-    n_blocks, nnz_pad = cols.shape
-    rows_g = (row_local + jnp.arange(n_blocks, dtype=jnp.int32)[:, None]
-              * block_rows).reshape(-1)
-    cols_f = cols.reshape(-1)
-    dy_rows = jnp.take(dy, rows_g, axis=0)                     # (nnz, D)
-    x_rows = jnp.take(x, cols_f, axis=0)
-    dvals = jnp.sum(dy_rows * x_rows, axis=-1).reshape(n_blocks, nnz_pad)
-    dx = jax.ops.segment_sum(dy_rows * vals.reshape(-1)[:, None], cols_f,
-                             num_segments=x.shape[0])
-    return (_float0_zeros(cols), _float0_zeros(row_local), dvals,
-            _float0_zeros(remaining), dx.astype(x.dtype))
+def _ad_bwd(statics, res, dy):
+    (u_cols, remaining, out_block, first,
+     t_u_cols, t_remaining, t_out_block, t_first, a_t, x) = res
+    block_rows, n_blocks, n_t_blocks, group, d_tile, gather, interp = statics
+    # dX = Aᵀ·dY through the same Pallas kernel on the transpose layout
+    dx_full = spmm_dedup_chunks(t_u_cols, t_remaining, t_out_block, t_first,
+                                a_t, dy, block_rows=block_rows,
+                                n_blocks=n_t_blocks, group=group,
+                                d_tile=d_tile, gather=gather,
+                                interpret=interp)
+    dx = dx_full[: x.shape[0]].astype(x.dtype)
+    # dA[k] = dY_block(k) · landingᵀ(k) — the forward's operand gather again
+    n_chunks, width = u_cols.shape
+    d = x.shape[1]
+    land = jnp.take(x, u_cols.reshape(-1), axis=0).astype(jnp.float32)
+    land = land.reshape(n_chunks, width, d)
+    dyb = jnp.take(dy.reshape(n_blocks, block_rows, d), out_block, axis=0)
+    da = jnp.einsum("krd,kud->kru", dyb.astype(jnp.float32), land)
+    da = da.reshape(n_chunks * block_rows, width)
+    # a_t does not enter the primal value — its cotangent is exactly zero
+    # (traced edge values reach it through the scatter outside this op)
+    return (_float0_zeros(u_cols), _float0_zeros(remaining),
+            _float0_zeros(out_block), _float0_zeros(first), da,
+            _float0_zeros(t_u_cols), _float0_zeros(t_remaining),
+            _float0_zeros(t_out_block), _float0_zeros(t_first),
+            jnp.zeros_like(a_t), dx)
 
 
-_spmm_blocked_ell_ad.defvjp(_ad_fwd, _ad_bwd)
+_spmm_dedup_ad.defvjp(_ad_fwd, _ad_bwd)
 
 
-def spmm_blocked_ell_grad(cols, row_local, vals, remaining, x,
-                          block_rows: int = 8, interpret=None):
-    """Differentiable blocked-ELL SpMM (grads flow to ``vals`` and ``x``)."""
+def spmm_dedup_grad(u_cols, remaining, out_block, first, a,
+                    t_u_cols, t_remaining, t_out_block, t_first, a_t, x, *,
+                    block_rows: int, n_blocks: int, n_t_blocks: int,
+                    group: int = 8, d_tile=None, gather: str = "auto",
+                    interpret=None):
+    """Differentiable chunked-dedup SpMM (grads flow to ``a``, ``a_t`` —
+    i.e. to edge values through the coefficient scatters — and ``x``)."""
     if interpret is None:
         interpret = not is_tpu()
-    return _spmm_blocked_ell_ad(block_rows, bool(interpret), cols, row_local,
-                                vals, remaining, x)
+    statics = (block_rows, n_blocks, n_t_blocks, group, d_tile, gather,
+               bool(interpret))
+    return _spmm_dedup_ad(statics, u_cols, remaining, out_block, first, a,
+                          t_u_cols, t_remaining, t_out_block, t_first, a_t,
+                          x)
 
 
 def spmm(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, x,
          n_rows: int, block_rows: int = 8, use_kernel: bool = True):
-    """Y = A @ X.  Packs once (host), then runs the Pallas kernel (compiled on
-    TPU, interpret elsewhere).  Returns (n_rows, D) — padding rows stripped."""
-    ell = pack_blocked_ell(rows, cols, vals, n_rows, int(x.shape[0]),
+    """Y = A @ X.  Packs once (host), then runs the Pallas kernel (compiled
+    on TPU, interpret elsewhere).  Returns (n_rows, D) — padding stripped."""
+    from repro.kernels.gustavson_spmm.ref import spmm_dedup_chunks_ref
+    from repro.sparse.graph import pack_dedup_chunks
+    ch = pack_dedup_chunks(rows, cols, vals, n_rows, int(x.shape[0]),
                            block_rows=block_rows)
-    args = (jax.numpy.asarray(ell.cols), jax.numpy.asarray(ell.row_local),
-            jax.numpy.asarray(ell.vals), jax.numpy.asarray(ell.remaining),
-            x)
+    args = (jnp.asarray(ch.u_cols), jnp.asarray(ch.remaining),
+            jnp.asarray(ch.out_block), jnp.asarray(ch.first),
+            jnp.asarray(ch.a))
+    n_blocks = ch.n_blocks
     if use_kernel:
-        y = spmm_blocked_ell(*args, block_rows=block_rows,
-                             interpret=not is_tpu())
+        y = spmm_dedup_chunks(*args, x, block_rows=block_rows,
+                              n_blocks=n_blocks, interpret=not is_tpu())
     else:
-        y = spmm_blocked_ell_ref(*args, block_rows)
+        y = spmm_dedup_chunks_ref(args[0], args[2], args[4], x,
+                                  block_rows, n_blocks)
     return y[:n_rows]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the Gustavson SpMM kernel (blocked-ELL layout)."""
+"""Pure-jnp oracles for the Gustavson SpMM kernel layouts."""
 from __future__ import annotations
 
 import jax
@@ -8,11 +8,26 @@ import jax.numpy as jnp
 def spmm_blocked_ell_ref(cols: jax.Array, row_local: jax.Array,
                          vals: jax.Array, remaining: jax.Array,
                          x: jax.Array, block_rows: int) -> jax.Array:
-    """cols/row_local/vals: (n_blocks, nnz_pad); x: (N, D).
-    Returns (n_blocks * block_rows, D).  Padding lanes carry vals == 0."""
+    """Per-lane blocked-ELL oracle.  cols/row_local/vals: (n_blocks,
+    nnz_pad); x: (N, D).  Returns (n_blocks * block_rows, D).  Padding lanes
+    carry vals == 0."""
     n_blocks, nnz_pad = cols.shape
     rows_global = row_local + (jnp.arange(n_blocks, dtype=jnp.int32)[:, None]
                                * block_rows)
     pp = jnp.take(x, cols.reshape(-1), axis=0) * vals.reshape(-1)[:, None]
     return jax.ops.segment_sum(pp, rows_global.reshape(-1),
                                num_segments=n_blocks * block_rows)
+
+
+def spmm_dedup_chunks_ref(u_cols: jax.Array, out_block: jax.Array,
+                          a: jax.Array, x: jax.Array, block_rows: int,
+                          n_blocks: int) -> jax.Array:
+    """Dedup-chunk oracle: per chunk, coefficient tile × gathered operands,
+    summed into the chunk's output block.  Padding cells carry a == 0."""
+    n_chunks, width = u_cols.shape
+    land = jnp.take(x, u_cols.reshape(-1), axis=0).astype(jnp.float32)
+    land = land.reshape(n_chunks, width, -1)
+    contrib = jnp.einsum("kru,kud->krd",
+                         a.reshape(n_chunks, block_rows, width), land)
+    y = jax.ops.segment_sum(contrib, out_block, num_segments=n_blocks)
+    return y.reshape(n_blocks * block_rows, -1).astype(x.dtype)

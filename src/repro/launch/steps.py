@@ -49,14 +49,27 @@ def build_lm_step(cfg, shape, opt_cfg=None):
 # GNN
 # ---------------------------------------------------------------------------
 
+def resolve_gnn_plan(graph, backend: str, **plan_kwargs):
+    """Host plan for ``graph`` through the LRU plan cache — repeated step
+    builds against a static graph re-pack no layouts.  ``dense``/``chunked``
+    run off the inline COO plan the models build, so they need none."""
+    if graph is None or backend not in ("pallas", "distributed"):
+        return None
+    from repro.sparse.plan import cached_plan_from_graph
+    return cached_plan_from_graph(graph, backends=(backend,), **plan_kwargs)
+
+
 def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
                    opt_cfg=None, backend: str = "dense", plan=None,
-                   triplet_plan=None):
+                   triplet_plan=None, graph=None):
     """``backend`` selects the sparse executor by registry name
     (``dense``/``chunked``/``pallas``/``distributed``); ``plan`` is a
     host-built ``repro.sparse.plan.make_plan`` — required for the latter
-    two, optional (inline COO plan) for the former."""
+    two, optional (inline COO plan) for the former.  Passing ``graph``
+    instead of ``plan`` resolves the layouts through the plan cache."""
     opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if plan is None:
+        plan = resolve_gnn_plan(graph, backend)
     kind = ARCHS[arch_id].gnn_kind
     n_graphs = statics["n_graphs"]
     bk = {"backend": backend, "plan": plan}
@@ -123,14 +136,15 @@ def build_recsys_step(cfg, shape, opt_cfg=None):
 
 
 def build_step(arch_id: str, cfg, shape, statics, opt_cfg=None,
-               backend: str = "dense", plan=None, triplet_plan=None):
+               backend: str = "dense", plan=None, triplet_plan=None,
+               graph=None):
     fam = ARCHS[arch_id].family
     if fam == "lm":
         return build_lm_step(cfg, shape, opt_cfg)
     if fam == "gnn":
         return build_gnn_step(arch_id, cfg, shape, statics, opt_cfg,
                               backend=backend, plan=plan,
-                              triplet_plan=triplet_plan)
+                              triplet_plan=triplet_plan, graph=graph)
     return build_recsys_step(cfg, shape, opt_cfg)
 
 

@@ -49,7 +49,6 @@ def _lm_setup(cfg, batch, seq, seed):
 
 def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense"):
     from repro.sparse.graph import make_graph, sym_norm_weights
-    from repro.sparse.plan import plan_from_graph
     s, r, x, y, c = syn.cora_like(seed)
     n = 2708
     if arch_id.startswith("gcn"):
@@ -73,13 +72,13 @@ def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense"):
     if arch_id.startswith("gcn"):
         batch["edge_weight"] = g.edge_weight
     # pallas/distributed need host-precomputed layouts; dense/chunked run
-    # off the inline plan the model builds from the batch arrays
-    plan = (plan_from_graph(g, backends=(backend,))
-            if backend in ("pallas", "distributed") else None)
+    # off the inline plan the model builds from the batch arrays.  The
+    # graph goes through the plan cache, so re-building the step for a
+    # static graph re-packs nothing.
     shape = S.GNN_SHAPES["full_graph_sm"]
     step = steps_mod.build_gnn_step(arch_id, cfg, shape,
                                     {"n_graphs": 1}, adamw.AdamWConfig(lr=1e-2),
-                                    backend=backend, plan=plan)
+                                    backend=backend, graph=g)
 
     def batches():
         while True:

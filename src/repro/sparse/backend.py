@@ -151,21 +151,35 @@ register_backend(Backend("chunked", _chunked_aggregate, _chunked_accumulate))
 # pallas — blocked-ELL Gustavson kernel (compiled on TPU, interpret elsewhere)
 # ---------------------------------------------------------------------------
 
+def _coeff_tiles(plan, vals, a_base, slots):
+    """Coefficient tiles for traced edge values: scatter-add straight into
+    the 2-D ``(n_chunks·block_rows, width)`` layout (duplicate edges share a
+    cell — add, not set; OOB slots of padding edges drop)."""
+    width = a_base.shape[1]
+    v = jnp.where(plan.valid, vals, 0).astype(jnp.float32)
+    return jnp.zeros_like(a_base).at[slots // width, slots % width].add(
+        v, mode="drop")
+
+
 def _pallas_aggregate(plan, vals, x):
     from repro.kernels.gustavson_spmm import ops as gops
     plan.require("ell", "pallas")
     if vals is None:
-        v_ell = plan.ell_vals
+        a, a_t = plan.ell_a, plan.ell_t_a
     else:
-        v = jnp.where(plan.valid, vals, 0).astype(jnp.float32)
-        flat = jnp.zeros((plan.n_blocks * plan.nnz_pad,), jnp.float32)
-        v_ell = flat.at[plan.ell_slots].set(v, mode="drop")
-        v_ell = v_ell.reshape(plan.n_blocks, plan.nnz_pad)
-    y = gops.spmm_blocked_ell_grad(plan.ell_cols, plan.ell_row_local, v_ell,
-                                   plan.ell_remaining,
-                                   x.astype(jnp.float32),
-                                   block_rows=plan.block_rows)
-    return y[: plan.n_rows].astype(x.dtype)
+        a = _coeff_tiles(plan, vals, plan.ell_a, plan.ell_slots)
+        a_t = _coeff_tiles(plan, vals, plan.ell_t_a, plan.ell_t_slots)
+    # bf16 stays bf16: the kernel lands operands in x.dtype, accumulates in
+    # f32, and evicts tiles back in x.dtype — no full-array upcast here
+    y = gops.spmm_dedup_grad(
+        plan.ell_u_cols, plan.ell_remaining, plan.ell_out_block,
+        plan.ell_first, a,
+        plan.ell_t_u_cols, plan.ell_t_remaining, plan.ell_t_out_block,
+        plan.ell_t_first, a_t, x,
+        block_rows=plan.block_rows, n_blocks=plan.n_blocks,
+        n_t_blocks=plan.n_t_blocks, group=plan.ell_group,
+        d_tile=plan.ell_d_tile)
+    return y[: plan.n_rows]
 
 
 def _pallas_accumulate(plan, messages):

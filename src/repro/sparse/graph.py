@@ -152,3 +152,116 @@ def pack_blocked_ell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
         remaining=counts.astype(np.int32), n_rows=n_rows, n_cols=n_cols,
         block_rows=block_rows, slots=slots,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class DedupChunks:
+    """Operand-deduplicated chunked blocked-ELL for the Gustavson kernel.
+
+    Rows are grouped into output blocks of ``block_rows``; each block's nnz
+    are **deduplicated by source row** (one landing-buffer lane per distinct
+    operand — NeuraChip's operand-reuse, killing redundant gather traffic)
+    and split into **chunks** of at most ``width`` distinct operands, so one
+    pathological row (a power-law hub in the transpose) never inflates every
+    block's padding.  A chunk carries:
+
+    * ``u_cols[k]``   — the distinct source-row ids (padded with 0);
+    * ``a[k·BR:(k+1)·BR]`` — a dense ``(block_rows, width)`` coefficient tile:
+      ``a[r, u] = Σ vals`` over the chunk's nnz with local row ``r`` and
+      operand ``u`` (the stacked one-hot matrices of the grouped multiply);
+    * ``remaining[k]`` — the rolling-eviction counter (# real operands);
+    * ``out_block[k]`` — which output block the chunk folds into; chunks of
+      one block are consecutive, ``first[k]`` marks the first (overwrite vs
+      accumulate on revisit).  Every output block owns ≥ 1 chunk, so even
+      empty blocks evict a (zero) tile.
+
+    ``slots[i]`` maps input edge *i* to its cell in the flattened ``a`` so
+    traced edge values (GAT attention) can be **scatter-added** into the
+    coefficient tiles on device; excluded edges get an out-of-bounds slot.
+    """
+
+    u_cols: np.ndarray     # (n_chunks, width) int32 — distinct operand rows
+    a: np.ndarray          # (n_chunks·block_rows, width) f32 — coeff tiles
+    remaining: np.ndarray  # (n_chunks,) int32 — eviction counters
+    out_block: np.ndarray  # (n_chunks,) int32 — destination output block
+    first: np.ndarray      # (n_chunks,) int32 — 1 ⇔ first chunk of its block
+    n_rows: int
+    n_cols: int
+    block_rows: int
+    slots: Optional[np.ndarray] = None  # (E,) int32 into a.reshape(-1)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.u_cols.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.u_cols.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return round_up(self.n_rows, self.block_rows) // self.block_rows
+
+
+def pack_dedup_chunks(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                      n_rows: int, n_cols: int, block_rows: int = 8,
+                      width_cap: int = 128,
+                      width_multiple: int = 16) -> DedupChunks:
+    """Pack COO into DedupChunks (host-side, once per graph).
+
+    ``width`` adapts to the graph: the max distinct-operand count over
+    chunks after capping at ``width_cap``, rounded to ``width_multiple`` —
+    balanced graphs get narrow tiles, hub-heavy ones get more chunks.
+    """
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    e = rows.shape[0]
+    n_blocks = round_up(n_rows, block_rows) // block_rows
+    order = np.argsort(rows, kind="stable")
+    blk_sorted = rows[order] // block_rows
+
+    # per block: dedup operands, split into runs of ≤ width_cap distinct
+    per_block = []            # [(block, u_ids, edge_idx, rloc, uidx)]
+    widths = [1]
+    starts = np.zeros(n_blocks + 1, np.int64)
+    np.add.at(starts, blk_sorted + 1, 1)
+    starts = np.cumsum(starts)
+    for b in range(n_blocks):
+        idx = order[starts[b]:starts[b + 1]]
+        if idx.size == 0:
+            per_block.append([(b, np.empty(0, np.int64), idx,
+                               np.empty(0, np.int64), np.empty(0, np.int64))])
+            continue
+        u_ids, uinv = np.unique(cols[idx], return_inverse=True)
+        chunks = []
+        for lo in range(0, u_ids.size, width_cap):
+            hi = min(lo + width_cap, u_ids.size)
+            sel = (uinv >= lo) & (uinv < hi)
+            chunks.append((b, u_ids[lo:hi], idx[sel],
+                           rows[idx[sel]] - b * block_rows, uinv[sel] - lo))
+            widths.append(hi - lo)
+        per_block.append(chunks)
+    width = int(round_up(int(max(widths)), width_multiple))
+
+    n_chunks = sum(len(c) for c in per_block)
+    u_cols = np.zeros((n_chunks, width), np.int32)
+    a = np.zeros((n_chunks * block_rows, width), np.float32)
+    remaining = np.zeros(n_chunks, np.int32)
+    out_block = np.zeros(n_chunks, np.int32)
+    first = np.zeros(n_chunks, np.int32)
+    slots = np.full(e, n_chunks * block_rows * width, np.int32)  # OOB default
+    k = 0
+    for chunks in per_block:
+        for i, (b, u_ids, idx, rloc, uidx) in enumerate(chunks):
+            u_cols[k, :u_ids.size] = u_ids
+            remaining[k] = u_ids.size
+            out_block[k] = b
+            first[k] = int(i == 0)
+            cell = (k * block_rows + rloc) * width + uidx
+            np.add.at(a.reshape(-1), cell, vals[idx])
+            slots[idx] = cell
+            k += 1
+    return DedupChunks(u_cols=u_cols, a=a, remaining=remaining,
+                       out_block=out_block, first=first, n_rows=n_rows,
+                       n_cols=n_cols, block_rows=block_rows, slots=slots)

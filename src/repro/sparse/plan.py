@@ -8,12 +8,18 @@ it precomputes, once, every layout the backend registry
 
 * padded COO (``rows``/``cols``/``base_vals``/``valid``) — the ``dense``
   segment-sum executor and the ``chunked`` rolling-eviction executor;
-* DRHM-mapped blocked-ELL (``ell_*``, via ``pack_blocked_ell``) — the
-  ``pallas`` Gustavson kernel, plus per-edge ``ell_slots`` so *traced* edge
-  values (e.g. GAT attention weights) can be scattered into the packed layout
-  on device;
+* operand-deduplicated chunk layout (``ell_*``, via ``pack_dedup_chunks``) —
+  the ``pallas`` Gustavson kernel — **twice**: the forward matrix and its
+  transpose (``ell_t_*``), so the kernel's backward pass (dX = Aᵀ·dY) runs
+  through the same Pallas pipeline.  Per-edge ``ell_slots``/``ell_t_slots``
+  let *traced* edge values (e.g. GAT attention weights) be scatter-added
+  into the coefficient tiles on device;
 * DRHM shard plan (``dist_*``, via ``plan_distributed_spmm``) — the
   ``distributed`` all-gather executor, again with scatter slots.
+
+``cached_plan_from_graph`` adds an LRU cache keyed on graph identity +
+backend set + layout parameters, so repeated step builds against a static
+graph stop re-packing layouts host-side.
 
 ``AggregationPlan`` is registered as a pytree (arrays are leaves, layout
 sizes / the mesh are static aux data), so plans pass through ``jax.jit``
@@ -52,9 +58,11 @@ class AggregationPlan:
     # --- static layout sizes (pytree aux data) ---
     n_rows: int                      # padded node count incl. ghost row
     chunk: int = 8192                # rolling-eviction wave size
-    block_rows: int = 8              # blocked-ELL rows per block
-    n_blocks: int = 0
-    nnz_pad: int = 0
+    block_rows: int = 8              # output-block rows (pallas layout)
+    n_blocks: int = 0                # forward output blocks (pallas)
+    n_t_blocks: int = 0              # transpose output blocks (pallas bwd)
+    ell_group: int = 8               # DMA-wave width (rows per wave)
+    ell_d_tile: Optional[int] = None  # feature-tile width (None → auto)
     n_shards: int = 0
     rows_per_shard: int = 0
     edges_per_shard: int = 0
@@ -66,12 +74,20 @@ class AggregationPlan:
     valid: Optional[Array] = None      # (E_pad,) bool
     base_vals: Optional[Array] = None  # (E_pad,) f32 — weight·valid
 
-    # --- blocked-ELL section (`pallas`) ---
-    ell_cols: Optional[Array] = None       # (n_blocks, nnz_pad) int32
-    ell_row_local: Optional[Array] = None  # (n_blocks, nnz_pad) int32
-    ell_vals: Optional[Array] = None       # (n_blocks, nnz_pad) f32
-    ell_remaining: Optional[Array] = None  # (n_blocks,) int32
+    # --- dedup-chunk section (`pallas`; see graph.pack_dedup_chunks) ---
+    ell_u_cols: Optional[Array] = None     # (n_chunks, width) int32
+    ell_remaining: Optional[Array] = None  # (n_chunks,) int32
+    ell_out_block: Optional[Array] = None  # (n_chunks,) int32
+    ell_first: Optional[Array] = None      # (n_chunks,) int32
+    ell_a: Optional[Array] = None          # (n_chunks·block_rows, width) f32
     ell_slots: Optional[Array] = None      # (E_pad,) int32; OOB ⇒ dropped
+    # transpose mirror — the kernelized backward's layout
+    ell_t_u_cols: Optional[Array] = None
+    ell_t_remaining: Optional[Array] = None
+    ell_t_out_block: Optional[Array] = None
+    ell_t_first: Optional[Array] = None
+    ell_t_a: Optional[Array] = None
+    ell_t_slots: Optional[Array] = None
 
     # --- DRHM shard section (`distributed`) ---
     dist_rows_local: Optional[Array] = None  # (S*e_per,) int32
@@ -83,7 +99,7 @@ class AggregationPlan:
 
     def has(self, section: str) -> bool:
         if section == "ell":
-            return self.ell_cols is not None
+            return self.ell_u_cols is not None
         if section == "dist":
             return self.dist_rows_local is not None and self.mesh is not None
         return self.rows is not None
@@ -102,11 +118,15 @@ class AggregationPlan:
 
 _LEAF_FIELDS = (
     "rows", "cols", "valid", "base_vals",
-    "ell_cols", "ell_row_local", "ell_vals", "ell_remaining", "ell_slots",
+    "ell_u_cols", "ell_remaining", "ell_out_block", "ell_first", "ell_a",
+    "ell_slots",
+    "ell_t_u_cols", "ell_t_remaining", "ell_t_out_block", "ell_t_first",
+    "ell_t_a", "ell_t_slots",
     "dist_rows_local", "dist_cols_perm", "dist_vals", "dist_slots",
     "dist_perm", "dist_inv_perm",
 )
-_AUX_FIELDS = ("n_rows", "chunk", "block_rows", "n_blocks", "nnz_pad",
+_AUX_FIELDS = ("n_rows", "chunk", "block_rows", "n_blocks", "n_t_blocks",
+               "ell_group", "ell_d_tile",
                "n_shards", "rows_per_shard", "edges_per_shard", "mesh")
 
 
@@ -153,7 +173,9 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
               edge_weight: Optional[np.ndarray] = None,
               edge_valid: Optional[np.ndarray] = None, *,
               backends: Sequence[str] = ("dense", "chunked"),
-              chunk: int = 8192, block_rows: int = 8, nnz_multiple: int = 128,
+              chunk: int = 8192, block_rows: int = 8, width_cap: int = 128,
+              width_multiple: int = 16, group: int = 8,
+              d_tile: Optional[int] = None,
               mesh=None, gamma: int = 0x9E3779B1,
               edge_pad_multiple: int = 8) -> AggregationPlan:
     """Host-side plan: precompute every layout in ``backends`` once.
@@ -179,19 +201,34 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
               valid=jnp.asarray(valid), base_vals=jnp.asarray(base))
 
     if "pallas" in backends:
-        from repro.sparse.graph import pack_blocked_ell
-        ell = pack_blocked_ell(r[vidx], s[vidx], base[vidx], int(n_rows),
-                               int(n_rows), block_rows=block_rows,
-                               nnz_multiple=nnz_multiple)
-        slots = np.full(e, ell.n_blocks * ell.nnz_pad, np.int32)
-        slots[vidx] = ell.slots
-        kw.update(block_rows=block_rows, n_blocks=ell.n_blocks,
-                  nnz_pad=ell.nnz_pad,
-                  ell_cols=jnp.asarray(ell.cols),
-                  ell_row_local=jnp.asarray(ell.row_local),
-                  ell_vals=jnp.asarray(ell.vals),
-                  ell_remaining=jnp.asarray(ell.remaining),
-                  ell_slots=jnp.asarray(slots))
+        from repro.sparse.graph import pack_dedup_chunks
+        pack_kw = dict(block_rows=block_rows, width_cap=width_cap,
+                       width_multiple=width_multiple)
+        # forward (A) and transpose (Aᵀ — the kernelized backward's layout);
+        # the matrix is square over the padded node space, so the transpose
+        # is the same packer with sender/receiver roles swapped
+        fwd = pack_dedup_chunks(r[vidx], s[vidx], base[vidx], int(n_rows),
+                                int(n_rows), **pack_kw)
+        tr = pack_dedup_chunks(s[vidx], r[vidx], base[vidx], int(n_rows),
+                               int(n_rows), **pack_kw)
+        slots = np.full(e, fwd.a.size, np.int32)
+        slots[vidx] = fwd.slots
+        t_slots = np.full(e, tr.a.size, np.int32)
+        t_slots[vidx] = tr.slots
+        kw.update(block_rows=block_rows, n_blocks=fwd.n_blocks,
+                  n_t_blocks=tr.n_blocks, ell_group=group, ell_d_tile=d_tile,
+                  ell_u_cols=jnp.asarray(fwd.u_cols),
+                  ell_remaining=jnp.asarray(fwd.remaining),
+                  ell_out_block=jnp.asarray(fwd.out_block),
+                  ell_first=jnp.asarray(fwd.first),
+                  ell_a=jnp.asarray(fwd.a),
+                  ell_slots=jnp.asarray(slots),
+                  ell_t_u_cols=jnp.asarray(tr.u_cols),
+                  ell_t_remaining=jnp.asarray(tr.remaining),
+                  ell_t_out_block=jnp.asarray(tr.out_block),
+                  ell_t_first=jnp.asarray(tr.first),
+                  ell_t_a=jnp.asarray(tr.a),
+                  ell_t_slots=jnp.asarray(t_slots))
 
     if "distributed" in backends:
         from repro.core.distributed import plan_distributed_spmm
@@ -225,3 +262,73 @@ def plan_from_graph(g, *, n_rows: Optional[int] = None,
                      edge_weight=(None if g.edge_weight is None
                                   else np.asarray(g.edge_weight)),
                      edge_valid=np.asarray(g.edge_valid), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache — repeated step builds on a static graph re-pack nothing
+# ---------------------------------------------------------------------------
+
+PLAN_CACHE_MAXSIZE = 8
+
+# key → (graph, plan); insertion order = LRU order.  The entry keeps a strong
+# reference to the keying graph so the id()s in the key cannot be recycled
+# while the entry lives; lookups re-verify identity with `is`.
+_PLAN_CACHE: "dict[tuple, tuple]" = {}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _freeze_kwargs(kwargs):
+    def _freeze(v):
+        if isinstance(v, (list, tuple)):
+            return tuple(_freeze(x) for x in v)
+        return v
+    return tuple(sorted((k, _freeze(v)) for k, v in kwargs.items()))
+
+
+def _graph_key(g, n_rows, kwargs):
+    ids = tuple(None if a is None else id(a)
+                for a in (g.senders, g.receivers, g.edge_weight,
+                          g.edge_valid))
+    return ids + (g.n_nodes, n_rows, _freeze_kwargs(kwargs))
+
+
+def _same_graph(a, b) -> bool:
+    return (a.senders is b.senders and a.receivers is b.receivers
+            and a.edge_weight is b.edge_weight
+            and a.edge_valid is b.edge_valid)
+
+
+def cached_plan_from_graph(g, *, n_rows: Optional[int] = None,
+                           maxsize: int = None, **kwargs) -> AggregationPlan:
+    """``plan_from_graph`` with an LRU cache keyed on graph identity (the
+    exact array objects), backend set, and layout parameters.
+
+    Host-side packing (blocked-ELL dedup chunks, DRHM shards) is O(E) python
+    work per call — a static graph trained for thousands of steps must pay
+    it once, not once per step-builder invocation.
+    """
+    maxsize = PLAN_CACHE_MAXSIZE if maxsize is None else maxsize
+    key = _graph_key(g, n_rows, kwargs)
+    entry = _PLAN_CACHE.get(key)
+    if entry is not None and _same_graph(entry[0], g):
+        _PLAN_CACHE_STATS["hits"] += 1
+        plan = entry[1]
+        # refresh LRU position
+        del _PLAN_CACHE[key]
+        _PLAN_CACHE[key] = entry
+        return plan
+    _PLAN_CACHE_STATS["misses"] += 1
+    plan = plan_from_graph(g, n_rows=n_rows, **kwargs)
+    _PLAN_CACHE[key] = (g, plan)
+    while len(_PLAN_CACHE) > max(int(maxsize), 0):
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    return plan
+
+
+def plan_cache_info() -> dict:
+    return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS.update(hits=0, misses=0)

@@ -244,6 +244,171 @@ def test_gin_schnet_dimenet_accept_backend(backend):
 
 
 # ---------------------------------------------------------------------------
+# Pallas kernel layout edge cases: feature tiling, DMA waves, chunk splits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [48, 96, 200])
+def test_pallas_feature_tiling_non_divisible(d):
+    """D not a multiple of the feature tile: the kernel pads to whole tiles
+    and slices back."""
+    n, e = 48, 300
+    s, r, w, valid, rng = _random_plan_inputs(n, e, d, n_invalid=20)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    plan = make_plan(s, r, n, edge_weight=w, edge_valid=valid,
+                     backends=("dense", "pallas"), d_tile=64)
+    ref = sb.aggregate(plan, None, x, backend="dense")
+    out = sb.aggregate(plan, None, x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("group", [5, 7, 16])
+def test_pallas_dma_group_not_dividing_width(group):
+    """DMA-wave width not dividing the chunk width: the kernel lane-pads.
+    Exercised in explicit-DMA gather mode, where waves matter."""
+    from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_dedup_chunks
+    from repro.sparse.graph import pack_dedup_chunks
+    n, e, d = 40, 220, 24
+    rng = np.random.default_rng(group)
+    s = rng.integers(0, n, e)
+    r = rng.integers(0, n, e)
+    vals = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ch = pack_dedup_chunks(r, s, vals, n, n)
+    assert ch.width % group or group == 16
+    plan = make_plan(s, r, n, edge_weight=vals, backends=("dense",))
+    ref = sb.aggregate(plan, None, x, backend="dense")
+    for gather in ("dma", "stream"):
+        out = spmm_dedup_chunks(
+            jnp.asarray(ch.u_cols), jnp.asarray(ch.remaining),
+            jnp.asarray(ch.out_block), jnp.asarray(ch.first),
+            jnp.asarray(ch.a), x, block_rows=ch.block_rows,
+            n_blocks=ch.n_blocks, group=group, gather=gather)
+        np.testing.assert_allclose(np.asarray(out[:n]), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=gather)
+
+
+def test_pallas_chunk_split_hub_rows():
+    """A hub receiver forces width_cap chunk splits: later chunks revisit
+    their output block and accumulate into the resident tile."""
+    n, e, d = 64, 600, 16
+    rng = np.random.default_rng(11)
+    s = rng.integers(0, n, e)
+    r = np.where(rng.random(e) < 0.5, 3, rng.integers(0, n, e))  # hub row 3
+    w = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    plan = make_plan(s, r, n, edge_weight=w,
+                     backends=("dense", "pallas"), width_cap=16)
+    assert plan.ell_u_cols.shape[0] > plan.n_blocks  # really split
+    ref = sb.aggregate(plan, None, x, backend="dense")
+    out = sb.aggregate(plan, None, x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_empty_blocks_evict_zeros():
+    """Blocks with zero nnz still evict (zero) tiles — remaining == 0."""
+    n, d = 64, 8
+    s = np.array([1, 2, 3])
+    r = np.array([0, 0, 1])           # only block 0 receives
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(n, d))
+                    .astype(np.float32))
+    plan = make_plan(s, r, n, backends=("dense", "pallas"))
+    assert int(np.asarray(plan.ell_remaining).min()) == 0
+    out = sb.aggregate(plan, None, x, backend="pallas")
+    assert float(jnp.abs(out[2:]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(x[1] + x[2]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_vjp_matches_dense_autodiff():
+    """Custom-VJP cotangents for BOTH `vals` and `x` match dense autodiff;
+    the backward runs through the Pallas kernel, not a segment reduction."""
+    import inspect
+    from repro.kernels.gustavson_spmm import ops as gops
+    n, e, d = 40, 250, 12
+    s, r, w, valid, rng = _random_plan_inputs(n, e, 9, n_invalid=30)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    vals = jnp.asarray(w)
+    plan = make_plan(s, r, n, edge_valid=valid,
+                     backends=("dense", "chunked", "pallas"))
+
+    def loss(v, xx, nm):
+        y = sb.aggregate(plan, v, xx, backend=nm)
+        return jnp.mean(y ** 2) + jnp.sum(y[:, 0])
+
+    gv_d, gx_d = jax.grad(loss, argnums=(0, 1))(vals, x, "dense")
+    gv_p, gx_p = jax.jit(jax.grad(loss, argnums=(0, 1)),
+                         static_argnums=2)(vals, x, "pallas")
+    np.testing.assert_allclose(np.asarray(gv_p), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-5)
+    # the acceptance contract: no plain-JAX segment reduction in the bwd
+    assert "segment_sum" not in inspect.getsource(gops._ad_bwd)
+
+
+def test_pallas_bf16_stays_bf16():
+    """bf16 features are not upcast: output dtype bf16, f32 accumulation."""
+    n, e, d = 32, 180, 16
+    s, r, w, valid, rng = _random_plan_inputs(n, e, 13)
+    xf = rng.normal(size=(n, d)).astype(np.float32)
+    x16 = jnp.asarray(xf, jnp.bfloat16)
+    plan = make_plan(s, r, n, edge_weight=w,
+                     backends=("dense", "pallas"))
+    out = sb.aggregate(plan, None, x16, backend="pallas")
+    assert out.dtype == jnp.bfloat16
+    ref = sb.aggregate(plan, None, jnp.asarray(xf), backend="dense")
+    np.testing.assert_allclose(np.float32(out), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hits_and_eviction():
+    from repro.sparse import plan as plan_mod
+    from repro.sparse.graph import make_graph
+    plan_mod.plan_cache_clear()
+    rng = np.random.default_rng(0)
+    graphs = [make_graph(rng.integers(0, 24, 60), rng.integers(0, 24, 60), 24)
+              for _ in range(3)]
+    p1 = plan_mod.cached_plan_from_graph(graphs[0], backends=("pallas",))
+    p2 = plan_mod.cached_plan_from_graph(graphs[0], backends=("pallas",))
+    assert p1 is p2                                     # identity hit
+    info = plan_mod.plan_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 1
+    # different layout params → different entry
+    p3 = plan_mod.cached_plan_from_graph(graphs[0], backends=("pallas",),
+                                         block_rows=16)
+    assert p3 is not p1
+    # LRU eviction at maxsize
+    for g in graphs:
+        plan_mod.cached_plan_from_graph(g, backends=("dense",), maxsize=2)
+    assert plan_mod.plan_cache_info()["size"] <= 2
+    p4 = plan_mod.cached_plan_from_graph(graphs[0], backends=("dense",),
+                                         maxsize=2)   # was evicted → repack
+    assert isinstance(p4, plan_mod.AggregationPlan)
+    plan_mod.plan_cache_clear()
+    assert plan_mod.plan_cache_info() == {"hits": 0, "misses": 0, "size": 0}
+
+
+def test_plan_cache_used_by_step_builder():
+    from repro.launch import steps as steps_mod
+    from repro.sparse import plan as plan_mod
+    from repro.sparse.graph import make_graph
+    plan_mod.plan_cache_clear()
+    rng = np.random.default_rng(1)
+    g = make_graph(rng.integers(0, 16, 40), rng.integers(0, 16, 40), 16)
+    a = steps_mod.resolve_gnn_plan(g, "pallas")
+    b = steps_mod.resolve_gnn_plan(g, "pallas")
+    assert a is b and a.has("ell")
+    assert steps_mod.resolve_gnn_plan(g, "dense") is None
+    plan_mod.plan_cache_clear()
+
+
+# ---------------------------------------------------------------------------
 # Plan / registry contracts
 # ---------------------------------------------------------------------------
 

@@ -49,6 +49,34 @@ def test_gustavson_empty_rows():
     np.testing.assert_allclose(np.asarray(out[0]), x[3] + x[4], rtol=1e-6)
 
 
+@pytest.mark.parametrize("gather", ["dma", "stream"])
+@pytest.mark.parametrize("n,e,d,d_tile", [
+    (48, 333, 33, 16),    # D % d_tile != 0 → padded feature tiles
+    (64, 500, 72, 24),    # 3 exact tiles
+    (24, 100, 130, None), # auto single tile
+])
+def test_gustavson_dedup_chunks_feature_tiling(gather, n, e, d, d_tile):
+    from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_dedup_chunks
+    from repro.kernels.gustavson_spmm.ref import spmm_dedup_chunks_ref
+    from repro.sparse.graph import pack_dedup_chunks
+    rng = np.random.default_rng(e + d)
+    rows = rng.integers(0, n, e)
+    cols = rng.integers(0, n, e)
+    vals = rng.normal(size=e).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ch = pack_dedup_chunks(rows, cols, vals, n, n, width_cap=32)
+    args = (jnp.asarray(ch.u_cols), jnp.asarray(ch.remaining),
+            jnp.asarray(ch.out_block), jnp.asarray(ch.first),
+            jnp.asarray(ch.a))
+    out = spmm_dedup_chunks(*args, x, block_rows=ch.block_rows,
+                            n_blocks=ch.n_blocks, d_tile=d_tile,
+                            gather=gather)
+    ref = spmm_dedup_chunks_ref(args[0], args[2], args[4], x,
+                                ch.block_rows, ch.n_blocks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("n,e,d", [(40, 256, 32), (17, 100, 64), (8, 64, 128)])
 def test_sddmm_shapes(n, e, d):
     rng = np.random.default_rng(d)

@@ -6,6 +6,7 @@ Modules: bloat_table (Table 1), speedup_table (Table 5 / Fig 16),
 mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
 (Fig 17), kernel_bench (Pallas kernels), backend_sweep (unified sparse
 executors — also emitted as BENCH_backends.json for the perf trajectory),
+spgemm_sweep (sparse×sparse engine — emitted as BENCH_spgemm.json),
 roofline (§Roofline from dry-run).
 """
 from __future__ import annotations
@@ -17,7 +18,7 @@ import traceback
 
 from benchmarks import (backend_sweep, bloat_table, cpi_histograms,
                         gnn_speedup, kernel_bench, mapping_heatmap,
-                        roofline, speedup_table)
+                        roofline, speedup_table, spgemm_sweep)
 
 MODULES = [
     ("table1_bloat", bloat_table),
@@ -27,10 +28,12 @@ MODULES = [
     ("fig17_gnn", gnn_speedup),
     ("pallas_kernels", kernel_bench),
     ("backend_sweep", backend_sweep),
+    ("spgemm_sweep", spgemm_sweep),
     ("roofline", roofline),
 ]
 
 BACKENDS_JSON = "BENCH_backends.json"
+SPGEMM_JSON = "BENCH_spgemm.json"
 
 
 def main() -> None:
@@ -48,6 +51,12 @@ def main() -> None:
     try:  # per-backend perf trajectory, tracked from PR 1 onward
         backend_sweep.write_json(BACKENDS_JSON, backend_sweep.collect())
         print(f"\nwrote {BACKENDS_JSON}")
+    except Exception:  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+    try:  # sparse×sparse engine trajectory, tracked from PR 3 onward
+        spgemm_sweep.write_json(SPGEMM_JSON, spgemm_sweep.collect())
+        print(f"wrote {SPGEMM_JSON}")
     except Exception:  # noqa: BLE001
         failures += 1
         traceback.print_exc()

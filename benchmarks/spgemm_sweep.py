@@ -1,0 +1,160 @@
+"""SpGEMM engine sweep — the measured-workload benchmark behind
+``BENCH_spgemm.json``.
+
+For each synthetic power-law A·A point the sweep records, per executor
+(``dense`` oracle / ``reference`` rolling-eviction / ``pallas`` hash-pad):
+us/call, max |Δ| vs the dense oracle, and ``speedup_vs_dense``.  Each size
+point also carries the engine's **measured** structure statistics —
+interim-pp, nnz_out, bloat % (paper Eq. 1), operand-dedup'd pp, hash-pad
+width / reseed / collision counts, and peak-live-pp per eviction policy
+(barrier vs rolling vs hashpad — the Fig-15 contrast) — cross-checked for
+exact equality against the independent ``neurasim.model.stats_from_coo``
+walk (``stats_match``).  A ``two_hop_build`` record times the Â² workload
+end-to-end (symbolic + numeric + graph re-pack).
+
+``--check`` gates parity (≤ 1e-4) AND the stats cross-check — CI's SpGEMM
+smoke; ``--json PATH`` writes atomically; ``--check-json PATH`` re-gates an
+already-written file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.backend_sweep import timeit, write_json
+from repro.data.synthetic import powerlaw_graph
+from repro.neurasim.model import stats_from_coo
+from repro.sparse import backend as sparse_backend
+from repro.sparse.graph import make_graph
+from repro.sparse.spgemm import make_spgemm_plan, two_hop_graph
+
+SPGEMM_BACKENDS = sparse_backend.ALL_SPGEMM_BACKENDS
+SIZES = ((512, 2048), (1024, 4096), (2048, 8192))   # (n, e) A·A points
+PARITY_TOL = 1e-4
+
+_CACHE = None
+
+
+def _graph(n, e):
+    s, r = powerlaw_graph(n, e + 256, seed=n)
+    return s[:e], r[:e]
+
+
+def _stat_record(n, e, plan, match, us_symbolic):
+    live = plan.peak_live_pp
+    return {
+        "kind": "spgemm_stats", "n": n, "e": e,
+        "pp_interim": plan.pp_interim, "pp_dedup": plan.pp_dedup,
+        "nnz_out": plan.nnz_out, "bloat_pct": round(plan.bloat_pct, 2),
+        "pad_width": plan.pad_width, "reseeds": plan.reseeds,
+        "collisions": plan.collisions, "pad_growths": plan.pad_growths,
+        "peak_live_pp_barrier": live["barrier"],
+        "peak_live_pp_rolling": live["rolling"],
+        "peak_live_pp_hashpad": live["hashpad"],
+        "stats_match": bool(match), "us_symbolic": round(us_symbolic, 1),
+    }
+
+
+def collect():
+    """Records: per-size measured structure stats (+ cross-check), per-
+    executor timings/parity, and the two-hop workload build."""
+    global _CACHE
+    if _CACHE is not None:
+        return _CACHE
+    records = []
+    for n, e in SIZES:
+        s, r = _graph(n, e)
+        rng = np.random.default_rng(e)
+        av = rng.normal(size=s.size).astype(np.float32)
+        t0 = time.perf_counter()
+        plan = make_spgemm_plan(r, s, n, r, s, n, a_vals=av, b_vals=av,
+                                chunk=4096)
+        us_symbolic = (time.perf_counter() - t0) * 1e6
+        w = stats_from_coo(r.astype(np.int64), s.astype(np.int64), n)
+        match = (w.pp_interim == plan.pp_interim
+                 and w.nnz_out == plan.nnz_out)
+        records.append(_stat_record(n, e, plan, match, us_symbolic))
+
+        ref = sparse_backend.spgemm(plan, backend="dense")
+        for name in SPGEMM_BACKENDS:
+            fn = jax.jit(lambda a, b, nm=name: sparse_backend.spgemm(
+                plan, a, b, backend=nm))
+            a_dev = jnp.asarray(av)
+            out = fn(a_dev, a_dev)
+            dev = float(jnp.abs(ref - out).max()) if plan.nnz_out else 0.0
+            records.append({
+                "kind": "spgemm", "backend": name, "n": n, "e": e,
+                "nnz_out": plan.nnz_out,
+                "us_per_call": round(timeit(fn, a_dev, a_dev), 1),
+                "max_abs_dev_vs_dense": dev,
+            })
+    dense = {(r["n"], r["e"]): r["us_per_call"] for r in records
+             if r.get("backend") == "dense"}
+    for r in records:
+        base = dense.get((r["n"], r["e"]))
+        if r.get("backend") and base:
+            r["speedup_vs_dense"] = round(base / r["us_per_call"], 3)
+
+    # the workload the engine opens: Â² precomputation, end to end
+    n, e = SIZES[0]
+    s, r = _graph(n, e)
+    g = make_graph(s, r, n)
+    t0 = time.perf_counter()
+    g2 = two_hop_graph(g, backend="pallas")
+    us = (time.perf_counter() - t0) * 1e6
+    records.append({
+        "kind": "two_hop_build", "backend": "pallas", "n": n, "e": e,
+        "e_two_hop": int(np.asarray(g2.edge_valid).sum()),
+        "us_per_call": round(us, 1),
+    })
+    _CACHE = records
+    return records
+
+
+def check_gate(records, tol=PARITY_TOL):
+    """→ offending records: parity above ``tol`` (NaN must fail) or a
+    measured-vs-analytic stats mismatch."""
+    bad = [r for r in records if r["kind"] == "spgemm"
+           and not (r["max_abs_dev_vs_dense"] <= tol)]
+    bad += [r for r in records if r["kind"] == "spgemm_stats"
+            and not r["stats_match"]]
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail on executor deviation > {PARITY_TOL} vs the "
+                         "dense oracle or a measured-stats mismatch")
+    ap.add_argument("--check-json", default=None, metavar="PATH",
+                    help="gate an already-written records file")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the records to PATH (atomically)")
+    args = ap.parse_args(argv)
+    if args.check_json:
+        with open(args.check_json) as f:
+            records = json.load(f)
+    else:
+        records = collect()
+        print("# spgemm sweep (CPU wall-time; pallas in interpret mode)")
+        for rec in records:
+            print(json.dumps(rec))
+    if args.json:
+        write_json(args.json, records)
+        print(f"wrote {args.json}")
+    if args.check or args.check_json:
+        bad = check_gate(records)
+        for r in bad:
+            print(f"SPGEMM GATE FAIL: {r}")
+        if bad:
+            raise SystemExit(1)
+        print(f"spgemm gate OK: parity <= {PARITY_TOL}, stats match")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,11 @@ def rolling_accumulate(produce: Callable[[int], Tuple[Array, Array]],
 
 
 def interim_pp_count(a_cols: np.ndarray, b_row_nnz: np.ndarray) -> int:
-    """# interim partial products of Gustavson A@B (host-side, exact)."""
+    """# interim partial products of Gustavson A@B (host-side, exact).
+
+    The canonical Eq.-1 count — ``core.spgemm.interim_partial_products``
+    re-exports it, and the SpGEMM engine's symbolic phase
+    (``sparse.spgemm.symbolic``) must agree with it exactly (tested)."""
     return int(b_row_nnz[a_cols].sum())
 
 

@@ -151,17 +151,37 @@ def segment_sum_chunked(rows: Array, messages: Array, n_rows: int,
 
 
 # ---------------------------------------------------------------------------
-# SpGEMM (sparse × sparse) — reference semantics for the paper's SpGEMM tables
+# SpGEMM (sparse × sparse) — tiny-size oracle only
 # ---------------------------------------------------------------------------
 
-def spgemm_via_dense(a_rows, a_cols, a_vals, n, b_rows, b_cols, b_vals, m, k):
-    """Reference C = A@B with A (n×m), B (m×k) as COO — densifies B.  Used only
-    by tests/benchmarks at small scale; production path is SpMM on features."""
+# densified-B cells above which the oracle refuses to run: the production
+# sparse-output path is repro.sparse.spgemm (symbolic + numeric phases)
+MAX_DENSE_ORACLE_ELEMENTS = 1 << 24
+
+
+def spgemm_via_dense(a_rows, a_cols, a_vals, n, b_rows, b_cols, b_vals, m, k,
+                     max_dense_elements: int = MAX_DENSE_ORACLE_ELEMENTS):
+    """Tiny-size test oracle for C = A@B with A (n×m), B (m×k) as COO.
+
+    Densifies B — O(m·k) memory — so it is size-guarded: anything above
+    ``max_dense_elements`` cells must go through the true sparse-output
+    engine (``repro.sparse.spgemm``), which this oracle exists to verify.
+    """
+    if m * k > max_dense_elements:
+        raise ValueError(
+            f"spgemm_via_dense would materialize {m}×{k} = {m * k} cells "
+            f"(> {max_dense_elements}); use the sparse-output engine "
+            "(repro.sparse.spgemm) instead")
     b_dense = jnp.zeros((m, k), dtype=jnp.float32).at[b_rows, b_cols].add(b_vals)
     return spmm(a_rows, a_cols, a_vals, b_dense, n)
 
 
-def interim_partial_products(a_cols: Array, b_row_nnz: Array) -> Array:
-    """Number of interim partial products of Gustavson SpGEMM:  sum over nnz(A)
-    of nnz(B[col, :]).  Drives the paper's Table 1 bloat metric."""
-    return jnp.sum(jnp.take(b_row_nnz, a_cols))
+def interim_partial_products(a_cols, b_row_nnz) -> int:
+    """Paper Eq.-1 interim-pp count.  Canonical implementation lives in
+    ``repro.core.eviction.interim_pp_count`` (host-side, exact); this
+    re-export keeps the historical import path alive.  Host-side only —
+    not jit-traceable (the count sizes host allocations, never a traced
+    computation)."""
+    from repro.core.eviction import interim_pp_count
+    import numpy as np
+    return interim_pp_count(np.asarray(a_cols), np.asarray(b_row_nnz))

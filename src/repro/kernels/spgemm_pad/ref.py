@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SpGEMM hash-pad kernel.
+
+Semantically the kernel is Σ over a block's chunks of ``A_tile @ slab_tile``
+(first/evict only schedule *where* the running sum lives); the oracle says
+exactly that with one batched einsum + segment-sum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spgemm_hashpad_ref(out_block: jax.Array, a: jax.Array, slab: jax.Array,
+                       block_rows: int, n_blocks: int,
+                       pad_width: int) -> jax.Array:
+    n_chunks = out_block.shape[0]
+    width = slab.shape[0] // n_chunks
+    contrib = jnp.einsum(
+        "kru,kuh->krh",
+        a.reshape(n_chunks, block_rows, width).astype(jnp.float32),
+        slab.reshape(n_chunks, width, pad_width).astype(jnp.float32))
+    y = jax.ops.segment_sum(contrib, out_block, num_segments=n_blocks)
+    return y.reshape(n_blocks * block_rows, pad_width)

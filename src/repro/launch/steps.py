@@ -49,30 +49,80 @@ def build_lm_step(cfg, shape, opt_cfg=None):
 # GNN
 # ---------------------------------------------------------------------------
 
-def resolve_gnn_plan(graph, backend: str, **plan_kwargs):
+def resolve_gnn_plan(graph, backend: str, two_hop: bool = False,
+                     **plan_kwargs):
     """Host plan for ``graph`` through the LRU plan cache — repeated step
     builds against a static graph re-pack no layouts.  ``dense``/``chunked``
-    run off the inline COO plan the models build, so they need none."""
-    if graph is None or backend not in ("pallas", "distributed"):
+    run off the inline COO plan the models build, so they need none —
+    except under ``two_hop``, where the aggregation graph is the
+    SpGEMM-precomputed Â² (one sparse×sparse product per static graph,
+    through its own cache), whose edges differ from the batch arrays, so
+    every backend needs the host plan."""
+    if graph is None:
+        return None
+    if two_hop:
+        from repro.sparse.spgemm import cached_two_hop_graph
+        graph = cached_two_hop_graph(graph)
+    host = backend in ("pallas", "distributed")
+    if not (host or two_hop):
         return None
     from repro.sparse.plan import cached_plan_from_graph
-    return cached_plan_from_graph(graph, backends=(backend,), **plan_kwargs)
+    return cached_plan_from_graph(
+        graph, backends=(backend,) if host else ("dense", "chunked"),
+        **plan_kwargs)
+
+
+# archs whose aggregation plan can be swapped for the Â² two-hop plan
+# wholesale (sum aggregators over plan-carried weights); gat/schnet/dimenet
+# compute per-edge quantities from the batch arrays, so only dimenet's
+# dedicated ``two_hop_plan`` extra stage applies there
+_TWO_HOP_MAIN = ("gin", "gcn")
 
 
 def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
                    opt_cfg=None, backend: str = "dense", plan=None,
-                   triplet_plan=None, graph=None):
+                   triplet_plan=None, graph=None, two_hop=None):
     """``backend`` selects the sparse executor by registry name
     (``dense``/``chunked``/``pallas``/``distributed``); ``plan`` is a
     host-built ``repro.sparse.plan.make_plan`` — required for the latter
     two, optional (inline COO plan) for the former.  Passing ``graph``
-    instead of ``plan`` resolves the layouts through the plan cache."""
+    instead of ``plan`` resolves the layouts through the plan cache.
+    ``two_hop`` (default: the config's ``two_hop`` field) precomputes Â²
+    once via the SpGEMM engine and aggregates over it."""
     opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if two_hop is None:
+        two_hop = getattr(cfg, "two_hop", False)
+    main_two_hop = two_hop and any(arch_id.startswith(p)
+                                   for p in _TWO_HOP_MAIN)
+    if two_hop and not main_two_hop and arch_id != "dimenet":
+        raise ValueError(
+            f"two_hop aggregation is not defined for {arch_id!r}: the "
+            "model derives per-edge values from the batch edge arrays")
+    # two_hop must never silently degrade to one-hop aggregation
+    if two_hop and graph is None:
+        raise ValueError(
+            "two_hop=True needs graph=<Graph> so the step builder can "
+            "precompute Â² through the SpGEMM engine")
+    if main_two_hop and plan is not None:
+        raise ValueError(
+            "pass graph=, not plan=, with two_hop=True — the Â² plan is "
+            "derived from the graph (an explicit plan would aggregate "
+            "one-hop)")
     if plan is None:
-        plan = resolve_gnn_plan(graph, backend)
-    kind = ARCHS[arch_id].gnn_kind
+        plan = resolve_gnn_plan(graph, backend, two_hop=main_two_hop)
     n_graphs = statics["n_graphs"]
     bk = {"backend": backend, "plan": plan}
+
+    if arch_id == "gin":
+        from repro.models.gnn import gin
+
+        def loss(p, b):
+            return gin.loss_fn(p, cfg, b["x"], b["senders"], b["receivers"],
+                               b["edge_valid"], b["graph_ids"], n_graphs,
+                               b["labels"], **bk)
+        return _train_wrap(loss, opt_cfg)
+
+    kind = ARCHS[arch_id].gnn_kind
 
     if kind == "conv":
         if arch_id.startswith("gcn"):
@@ -102,6 +152,8 @@ def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
                                   **bk)
     else:
         from repro.models.gnn import dimenet
+        two_hop_plan = (resolve_gnn_plan(graph, backend, two_hop=True)
+                        if two_hop else None)
 
         def loss(p, b):
             return dimenet.loss_fn(p, cfg, b["species"], b["pos"],
@@ -109,7 +161,8 @@ def build_gnn_step(arch_id: str, cfg, shape, statics: Dict[str, Any],
                                    b["edge_valid"], b["t_in"], b["t_out"],
                                    b["t_valid"], b["graph_ids"], n_graphs,
                                    b["targets"], **bk,
-                                   triplet_plan=triplet_plan)
+                                   triplet_plan=triplet_plan,
+                                   two_hop_plan=two_hop_plan)
     return _train_wrap(loss, opt_cfg)
 
 
@@ -137,14 +190,16 @@ def build_recsys_step(cfg, shape, opt_cfg=None):
 
 def build_step(arch_id: str, cfg, shape, statics, opt_cfg=None,
                backend: str = "dense", plan=None, triplet_plan=None,
-               graph=None):
-    fam = ARCHS[arch_id].family
+               graph=None, two_hop=None):
+    # "gin" is a beyond-assignment arch: GNN family, not in the registry
+    fam = "gnn" if arch_id == "gin" else ARCHS[arch_id].family
     if fam == "lm":
         return build_lm_step(cfg, shape, opt_cfg)
     if fam == "gnn":
         return build_gnn_step(arch_id, cfg, shape, statics, opt_cfg,
                               backend=backend, plan=plan,
-                              triplet_plan=triplet_plan, graph=graph)
+                              triplet_plan=triplet_plan, graph=graph,
+                              two_hop=two_hop)
     return build_recsys_step(cfg, shape, opt_cfg)
 
 

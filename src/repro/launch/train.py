@@ -47,7 +47,8 @@ def _lm_setup(cfg, batch, seq, seed):
     return params, step, batches
 
 
-def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense"):
+def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense",
+               two_hop: bool = False):
     from repro.sparse.graph import make_graph, sym_norm_weights
     s, r, x, y, c = syn.cora_like(seed)
     n = 2708
@@ -78,7 +79,8 @@ def _gnn_setup(arch_id, cfg, seed, full: bool, backend: str = "dense"):
     shape = S.GNN_SHAPES["full_graph_sm"]
     step = steps_mod.build_gnn_step(arch_id, cfg, shape,
                                     {"n_graphs": 1}, adamw.AdamWConfig(lr=1e-2),
-                                    backend=backend, graph=g)
+                                    backend=backend, graph=g,
+                                    two_hop=two_hop or None)
 
     def batches():
         while True:
@@ -102,6 +104,9 @@ def main():
     from repro.sparse.plan import ALL_BACKENDS
     ap.add_argument("--backend", default="dense", choices=list(ALL_BACKENDS),
                     help="sparse aggregation executor (GNN archs)")
+    ap.add_argument("--two-hop", action="store_true",
+                    help="aggregate over the SpGEMM-precomputed Â² two-hop "
+                         "graph (sum-aggregation GNNs, e.g. gcn-cora)")
     args = ap.parse_args()
 
     if args.preset == "lm100m":
@@ -120,7 +125,8 @@ def main():
             cfg = registry.get_config(arch_id, reduced=not args.full_gnn)
             params, step, batches = _gnn_setup(arch_id, cfg, args.seed,
                                                args.full_gnn,
-                                               backend=args.backend)
+                                               backend=args.backend,
+                                               two_hop=args.two_hop)
         else:
             from repro.models.recsys import dlrm
             cfg = registry.get_config(arch_id, reduced=True)

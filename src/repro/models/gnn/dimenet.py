@@ -45,6 +45,10 @@ class DimeNetConfig:
     max_triplets_per_edge: int = 8
     param_dtype: str = "float32"
     dp_axes: tuple = ()
+    # mix the Â² two-hop node aggregation into the output block: the step
+    # builder precomputes A@A once via the SpGEMM engine and passes its
+    # plan as ``two_hop_plan`` (sparse.spgemm; DESIGN.md §9)
+    two_hop: bool = False
 
 
 def _pin(x, cfg: "DimeNetConfig"):
@@ -122,7 +126,8 @@ def forward(params, cfg: DimeNetConfig, species: Array, pos: Array,
             t_in: Array, t_out: Array, t_valid: Array,
             graph_ids: Array, n_graphs: int, backend: str = "dense",
             plan: Optional[AggregationPlan] = None,
-            triplet_plan: Optional[AggregationPlan] = None) -> Array:
+            triplet_plan: Optional[AggregationPlan] = None,
+            two_hop_plan: Optional[AggregationPlan] = None) -> Array:
     """Edge-message DimeNet.  t_in/t_out index the edge list (triplets)."""
     n = species.shape[0]
     e = senders.shape[0]
@@ -179,6 +184,13 @@ def forward(params, cfg: DimeNetConfig, species: Array, pos: Array,
     # output block: edges → nodes → graphs
     per_edge = m * (rbf @ params["blocks"]["rbf_out"][-1].astype(h.dtype))
     node_h = sparse_backend.accumulate(pl, per_edge, backend=backend)
+    if two_hop_plan is not None:
+        # Â²-powered long-range mixing: one SpMM over the precomputed
+        # two-hop plan (path-count weighted), added to the one-hop readout.
+        # Gated on the plan alone: whoever built one asked for the stage
+        # (cfg.two_hop is how the step builder decides to build it)
+        node_h = node_h + sparse_backend.aggregate(two_hop_plan, None,
+                                                   node_h, backend=backend)
     atom_e = mlp_apply(params["output"], node_h, act=act)[:, 0]
     return jax.ops.segment_sum(atom_e, graph_ids, num_segments=n_graphs)
 
@@ -187,8 +199,10 @@ def loss_fn(params, cfg: DimeNetConfig, species, pos, senders, receivers,
             edge_valid, t_in, t_out, t_valid, graph_ids, n_graphs, targets,
             backend: str = "dense",
             plan: Optional[AggregationPlan] = None,
-            triplet_plan: Optional[AggregationPlan] = None):
+            triplet_plan: Optional[AggregationPlan] = None,
+            two_hop_plan: Optional[AggregationPlan] = None):
     e = forward(params, cfg, species, pos, senders, receivers, edge_valid,
                 t_in, t_out, t_valid, graph_ids, n_graphs, backend=backend,
-                plan=plan, triplet_plan=triplet_plan)
+                plan=plan, triplet_plan=triplet_plan,
+                two_hop_plan=two_hop_plan)
     return jnp.mean((e.astype(jnp.float32) - targets) ** 2)

@@ -30,6 +30,10 @@ class GINConfig:
     n_classes: int = 4
     train_eps: bool = True
     param_dtype: str = "float32"
+    # aggregate over the Â² two-hop neighborhood: the step builder
+    # precomputes A@A once via the SpGEMM engine (sparse.spgemm) and passes
+    # its plan in — every training step is then plain SpMM on Â²
+    two_hop: bool = False
 
 
 def init_params(key, cfg: GINConfig):

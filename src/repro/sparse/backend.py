@@ -25,6 +25,16 @@ NeuraMem half alone, for models whose multiply stage is vector-valued
 executor falls back to the chunked schedule there — the kernel's multiply
 stage is scalar-per-nnz by construction (DESIGN.md §3.3).
 
+True sparse×sparse SpGEMM (sparse output — the paper's headline workload)
+has its own registry under the same discipline:
+
+    spgemm(plan, a_vals, b_vals) -> c_vals   # C = A@B on the plan's
+                                             # symbolic structure
+
+over ``dense`` (size-guarded densify oracle) / ``reference``
+(rolling-eviction waves) / ``pallas`` (hash-pad kernel) executors, with the
+plan built once by ``repro.sparse.spgemm.make_spgemm_plan`` (DESIGN.md §9).
+
 Models never import ``repro.core.spgemm`` directly: they take a
 ``backend="dense"|"chunked"|"pallas"|"distributed"`` name, resolved here.
 """
@@ -36,14 +46,18 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import spgemm
+from repro.core import spgemm as core_spgemm
 from repro.sparse.plan import (ALL_BACKENDS, AggregationPlan,
                                BackendPlanError)
 
 Array = jax.Array
 
 __all__ = ["Backend", "BACKENDS", "ALL_BACKENDS", "BackendPlanError",
-           "register_backend", "get_backend", "aggregate", "accumulate"]
+           "register_backend", "get_backend", "aggregate", "accumulate",
+           "SpgemmBackend", "SPGEMM_BACKENDS", "ALL_SPGEMM_BACKENDS",
+           "register_spgemm_backend", "get_spgemm_backend", "spgemm"]
+
+ALL_SPGEMM_BACKENDS = ("dense", "reference", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +108,53 @@ def accumulate(plan: AggregationPlan, messages: Array,
 
 
 # ---------------------------------------------------------------------------
+# SpGEMM registry (sparse × sparse, sparse output — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmBackend:
+    """A registered SpGEMM executor: (plan, a_vals, b_vals) → c_vals."""
+
+    name: str
+    spgemm: Callable
+
+
+SPGEMM_BACKENDS: Dict[str, SpgemmBackend] = {}
+
+
+def register_spgemm_backend(backend: SpgemmBackend) -> SpgemmBackend:
+    SPGEMM_BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_spgemm_backend(name: str) -> SpgemmBackend:
+    if name not in SPGEMM_BACKENDS:
+        # executors live in the spgemm subsystem; importing it registers
+        # them (kept lazy — backend.py must not depend on the kernels)
+        import repro.sparse.spgemm.numeric  # noqa: F401
+    try:
+        return SPGEMM_BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown spgemm backend {name!r}; registered: "
+                       f"{sorted(SPGEMM_BACKENDS)}") from None
+
+
+def spgemm(plan, a_vals: Optional[Array] = None,
+           b_vals: Optional[Array] = None,
+           backend: str = "reference") -> Array:
+    """c_vals of C = A@B on the plan's symbolic structure (row-major CSR
+    order — ``plan.c_row``/``plan.c_col``).  ``a_vals``/``b_vals`` override
+    the plan's baked values; ``None`` uses them (structure is plan state,
+    values are data)."""
+    for nm, v, nnz in (("a_vals", a_vals, plan.nnz_a),
+                       ("b_vals", b_vals, plan.nnz_b)):
+        if v is not None and v.shape[0] != nnz:
+            raise ValueError(f"{nm} has {v.shape[0]} entries but the plan "
+                             f"holds {nnz} nonzeros")
+    return get_spgemm_backend(backend).spgemm(plan, a_vals, b_vals)
+
+
+# ---------------------------------------------------------------------------
 # Shared helpers
 # ---------------------------------------------------------------------------
 
@@ -134,14 +195,14 @@ register_backend(Backend("dense", _dense_aggregate, _dense_accumulate))
 
 def _chunked_aggregate(plan, vals, x):
     v = _edge_vals(plan, vals, x.dtype)
-    return spgemm.spmm_chunked(plan.rows, plan.cols, v, x, plan.n_rows,
-                               chunk=plan.chunk)
+    return core_spgemm.spmm_chunked(plan.rows, plan.cols, v, x, plan.n_rows,
+                                    chunk=plan.chunk)
 
 
 def _chunked_accumulate(plan, messages):
-    return spgemm.segment_sum_chunked(plan.rows,
-                                      _mask_messages(plan, messages),
-                                      plan.n_rows, chunk=plan.chunk)
+    return core_spgemm.segment_sum_chunked(plan.rows,
+                                           _mask_messages(plan, messages),
+                                           plan.n_rows, chunk=plan.chunk)
 
 
 register_backend(Backend("chunked", _chunked_aggregate, _chunked_accumulate))

@@ -75,6 +75,47 @@ def coo_to_csr(senders: np.ndarray, receivers: np.ndarray, n_nodes: int):
     return indptr, s_sorted.astype(np.int32), order
 
 
+def coarsen_graph(g: Graph, clusters: np.ndarray, n_clusters: int,
+                  backend: str = "reference",
+                  pad_multiple: int = 128) -> Graph:
+    """Coarse graph  A_c = Pᵀ A P  via two rectangular SpGEMMs.
+
+    ``clusters[i]`` assigns node i to one of ``n_clusters`` super-nodes; P
+    is the (n × n_c) one-hot assignment matrix, so ``A_c[a, b]`` sums the
+    weight of every original edge from cluster b into cluster a — the
+    standard contraction step of multilevel partitioners, here an exercise
+    of the sparse-output SpGEMM engine (DESIGN.md §9) on rectangular
+    operands: structure comes from the symbolic phase, the second product's
+    B-values are the first product's (device-computed) outputs.
+    """
+    from repro.sparse import backend as sb
+    from repro.sparse.spgemm import make_spgemm_plan
+    clusters = np.asarray(clusters, np.int64)
+    valid = np.asarray(g.edge_valid)
+    s = np.asarray(g.senders)[valid]
+    r = np.asarray(g.receivers)[valid]
+    w = (np.ones(s.size, np.float32) if g.edge_weight is None
+         else np.asarray(g.edge_weight)[valid])
+    n = int(g.n_nodes)
+    nodes = np.arange(n, dtype=np.int64)
+    # M = A @ P  (n × n_c): A[r, s] = w, P[i, clusters[i]] = 1
+    plan_m = make_spgemm_plan(r, s, n, nodes, clusters, n, n_clusters,
+                              a_vals=w, executors=(backend,))
+    m_vals = sb.spgemm(plan_m, backend=backend)
+    # A_c = Pᵀ @ M  (n_c × n_c): Pᵀ[clusters[i], i] = 1; M's structure is
+    # host-known from the first plan, its values flow in per call
+    plan_c = make_spgemm_plan(clusters, nodes, n_clusters,
+                              np.asarray(plan_m.c_row),
+                              np.asarray(plan_m.c_col), n, n_clusters,
+                              executors=(backend,))
+    c_vals = sb.spgemm(plan_c, None, m_vals, backend=backend)
+    return make_graph(np.asarray(plan_c.c_col).astype(np.int32),
+                      np.asarray(plan_c.c_row).astype(np.int32),
+                      int(n_clusters),
+                      edge_weight=np.asarray(c_vals, np.float32),
+                      pad_multiple=pad_multiple)
+
+
 def sym_norm_weights(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
                      add_self_loops: bool = True):
     """GCN symmetric normalization  D^-1/2 (A+I) D^-1/2  — host-side."""

@@ -1,0 +1,210 @@
+"""SpGEMM numeric phase — three interchangeable executors over one plan.
+
+The symbolic phase (``sparse.spgemm.symbolic``) froze the output structure;
+the numeric phase fills ``c_vals`` (one float per output nonzero, in the
+plan's row-major CSR order).  Executors, registered in
+``repro.sparse.backend`` under the same registry discipline as the SpMM
+engine:
+
+* ``dense``     — tiny-size oracle: densify B (size-guarded
+                  ``core.spgemm.spgemm_via_dense``), gather the structural
+                  entries.  The parity baseline, never a production path;
+* ``reference`` — segment-based rolling eviction: the pp → slot maps fold
+                  in fixed-size waves through
+                  ``core.eviction.rolling_accumulate`` (paper C3 — live
+                  interim set is one wave, not the Table-1 bloat);
+* ``pallas``    — the hash-pad kernel (``kernels.spgemm_pad``): A's
+                  dedup-chunk coefficient tiles × the hashed B slab, MXU
+                  folds into a VMEM pad, eviction at row completion.
+
+Values may be swapped per call (``a_vals``/``b_vals``; ``None`` uses the
+baked defaults) — structure is plan state, values are data.  That split is
+what makes the A²-powered workloads cheap: ``two_hop_graph`` runs SpGEMM
+once per graph, then every training step is plain SpMM on the Â² plan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spgemm as core_spgemm
+from repro.core.eviction import rolling_accumulate
+from repro.sparse.backend import SpgemmBackend, register_spgemm_backend
+from repro.sparse.spgemm.symbolic import SpgemmPlan, make_spgemm_plan
+
+Array = jax.Array
+
+__all__ = ["spgemm_to_coo", "two_hop_graph", "cached_two_hop_graph",
+           "two_hop_cache_clear"]
+
+
+def _a_vals(plan: SpgemmPlan, a_vals: Optional[Array]) -> Array:
+    return plan.a_base if a_vals is None else a_vals.astype(jnp.float32)
+
+
+def _b_vals(plan: SpgemmPlan, b_vals: Optional[Array]) -> Array:
+    return plan.b_base if b_vals is None else b_vals.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense — size-guarded densify-B oracle (tests/benchmarks only)
+# ---------------------------------------------------------------------------
+
+def _dense_spgemm(plan: SpgemmPlan, a_vals, b_vals) -> Array:
+    c = core_spgemm.spgemm_via_dense(
+        plan.a_rows, plan.a_cols, _a_vals(plan, a_vals), plan.n_rows,
+        plan.b_rows, plan.b_cols, _b_vals(plan, b_vals), plan.n_inner,
+        plan.n_cols)
+    return c[plan.c_row, plan.c_col]
+
+
+# ---------------------------------------------------------------------------
+# reference — rolling-eviction waves over the pp → slot maps (paper C3)
+# ---------------------------------------------------------------------------
+
+def _require_layout(plan: SpgemmPlan, field: str, executor: str) -> None:
+    if getattr(plan, field) is None:
+        raise ValueError(
+            f"plan lacks the {executor!r} layout; build it with "
+            f"make_spgemm_plan(..., executors=({executor!r}, ...))")
+
+
+def _reference_spgemm(plan: SpgemmPlan, a_vals, b_vals) -> Array:
+    av = _a_vals(plan, a_vals)
+    bv = _b_vals(plan, b_vals)
+    if plan.pp_interim:
+        _require_layout(plan, "pp_a", "reference")
+    if plan.n_waves == 0:
+        return jnp.zeros((plan.nnz_out,), jnp.float32)
+    pa = plan.pp_a.reshape(plan.n_waves, plan.chunk)
+    pb = plan.pp_b.reshape(plan.n_waves, plan.chunk)
+    ps = plan.pp_slot.reshape(plan.n_waves, plan.chunk)
+
+    def produce(w):
+        pp = (av[pa[w]] * bv[pb[w]]).astype(jnp.float32)
+        return pp[:, None], ps[w]
+
+    # one ghost slot: padding pps fold into row nnz_out and are dropped
+    acc = rolling_accumulate(produce, plan.n_waves, plan.nnz_out + 1, 1)
+    return acc[: plan.nnz_out, 0]
+
+
+# ---------------------------------------------------------------------------
+# pallas — hash-pad kernel on the dedup-chunk + hashed-slab layout
+# ---------------------------------------------------------------------------
+
+def _pallas_spgemm(plan: SpgemmPlan, a_vals, b_vals) -> Array:
+    from repro.kernels.spgemm_pad import ops as pad_ops
+    _require_layout(plan, "ell_a", "pallas")
+    if a_vals is None:
+        a_tiles = plan.ell_a
+    else:
+        # scatter-add through the packer's slot map (duplicate A entries
+        # share a cell — add; the layout is identical to the SpMM path's
+        # traced-vals coefficient scatter)
+        v = a_vals.astype(jnp.float32)
+        w = plan.width
+        a_tiles = jnp.zeros_like(plan.ell_a).at[
+            plan.ell_slots // w, plan.ell_slots % w].add(v, mode="drop")
+    bv = _b_vals(plan, b_vals)
+    slab = jnp.zeros((plan.n_chunks * plan.width, plan.pad_width),
+                     jnp.float32).at[plan.slab_row, plan.slab_col].add(
+        bv[plan.slab_src], mode="drop")
+    c_pad = pad_ops.hashpad_accumulate(
+        plan.ell_out_block, plan.ell_first, plan.ell_evict, a_tiles, slab,
+        block_rows=plan.block_rows, n_blocks=plan.n_blocks,
+        pad_width=plan.pad_width)
+    return c_pad[plan.out_row, plan.out_bucket]
+
+
+register_spgemm_backend(SpgemmBackend("dense", _dense_spgemm))
+register_spgemm_backend(SpgemmBackend("reference", _reference_spgemm))
+register_spgemm_backend(SpgemmBackend("pallas", _pallas_spgemm))
+
+
+# ---------------------------------------------------------------------------
+# Workloads the engine opens: Â² two-hop graphs (+ coarsening in sparse.graph)
+# ---------------------------------------------------------------------------
+
+def spgemm_to_coo(plan: SpgemmPlan, c_vals: Array):
+    """(rows, cols, vals) of C in the plan's row-major order."""
+    return plan.c_row, plan.c_col, c_vals
+
+
+def two_hop_graph(g, *, backend: str = "reference",
+                  drop_self_loops: bool = True, pad_multiple: int = 128,
+                  **plan_kwargs):
+    """Â² as a Graph: one SpGEMM per graph, then every step is SpMM.
+
+    Edge (j → i) of the result means a 2-path j → k → i exists in ``g``;
+    its weight is the path-count (or the path-weight product sum when ``g``
+    is weighted) — GIN's two-hop sum aggregation and GCN's Â² propagation
+    consume it unchanged.  ``drop_self_loops`` removes the diagonal
+    (closed 2-paths i → k → i), the usual 2-hop-neighborhood convention.
+    """
+    from repro.sparse import backend as sb
+    from repro.sparse.graph import make_graph
+    valid = np.asarray(g.edge_valid)
+    s = np.asarray(g.senders)[valid]
+    r = np.asarray(g.receivers)[valid]
+    w = (None if g.edge_weight is None
+         else np.asarray(g.edge_weight)[valid])
+    n = int(g.n_nodes)
+    # aggregation viewpoint everywhere in the repo: A[receiver, sender];
+    # only the executor actually running needs its layout built
+    plan = make_spgemm_plan(r, s, n, r, s, n, a_vals=w, b_vals=w,
+                            executors=(backend,), **plan_kwargs)
+    c_vals = np.asarray(sb.spgemm(plan, backend=backend))
+    cr = np.asarray(plan.c_row)
+    cc = np.asarray(plan.c_col)
+    if drop_self_loops:
+        keep = cr != cc
+        cr, cc, c_vals = cr[keep], cc[keep], c_vals[keep]
+    # rows are receivers ⇒ Graph(senders=c_col, receivers=c_row)
+    return make_graph(cc.astype(np.int32), cr.astype(np.int32), n,
+                      edge_weight=c_vals.astype(np.float32),
+                      pad_multiple=pad_multiple)
+
+
+# -- two-hop cache: one SpGEMM per static graph, not one per step build ----
+
+TWO_HOP_CACHE_MAXSIZE = 8
+
+_TWO_HOP_CACHE: "dict[tuple, tuple]" = {}
+
+
+def _graph_key(g, kwargs):
+    ids = tuple(None if a is None else id(a)
+                for a in (g.senders, g.receivers, g.edge_weight,
+                          g.edge_valid))
+    return ids + (g.n_nodes, tuple(sorted(kwargs.items())))
+
+
+def _same_graph(a, b) -> bool:
+    return (a.senders is b.senders and a.receivers is b.receivers
+            and a.edge_weight is b.edge_weight
+            and a.edge_valid is b.edge_valid)
+
+
+def cached_two_hop_graph(g, **kwargs):
+    """``two_hop_graph`` behind an LRU cache keyed on graph identity —
+    same discipline as ``sparse.plan.cached_plan_from_graph``: the SpGEMM
+    (symbolic + numeric) runs once per static graph."""
+    key = _graph_key(g, kwargs)
+    entry = _TWO_HOP_CACHE.get(key)
+    if entry is not None and _same_graph(entry[0], g):
+        del _TWO_HOP_CACHE[key]
+        _TWO_HOP_CACHE[key] = entry
+        return entry[1]
+    g2 = two_hop_graph(g, **kwargs)
+    _TWO_HOP_CACHE[key] = (g, g2)
+    while len(_TWO_HOP_CACHE) > TWO_HOP_CACHE_MAXSIZE:
+        _TWO_HOP_CACHE.pop(next(iter(_TWO_HOP_CACHE)))
+    return g2
+
+
+def two_hop_cache_clear() -> None:
+    _TWO_HOP_CACHE.clear()

@@ -1,24 +1,30 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run            # all, CSV to stdout
+  PYTHONPATH=src python -m benchmarks.run --serving  # serving engine only
 
 Modules: bloat_table (Table 1), speedup_table (Table 5 / Fig 16),
 mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
 (Fig 17), kernel_bench (Pallas kernels), backend_sweep (unified sparse
 executors — also emitted as BENCH_backends.json for the perf trajectory),
 spgemm_sweep (sparse×sparse engine — emitted as BENCH_spgemm.json),
+serving_bench (GNN inference serving — emitted as BENCH_serving.json),
 roofline (§Roofline from dry-run).
+
+The three BENCH_*.json files together are the reproducible perf
+trajectory: per-backend SpMM, the SpGEMM engine, and the serving engine —
+``--backends`` / ``--spgemm`` / ``--serving`` rerun any slice alone.
 """
 from __future__ import annotations
 
-import json
+import argparse
 import sys
 import time
 import traceback
 
 from benchmarks import (backend_sweep, bloat_table, cpi_histograms,
                         gnn_speedup, kernel_bench, mapping_heatmap,
-                        roofline, speedup_table, spgemm_sweep)
+                        roofline, serving_bench, speedup_table, spgemm_sweep)
 
 MODULES = [
     ("table1_bloat", bloat_table),
@@ -29,37 +35,74 @@ MODULES = [
     ("pallas_kernels", kernel_bench),
     ("backend_sweep", backend_sweep),
     ("spgemm_sweep", spgemm_sweep),
+    ("serving_bench", serving_bench),
     ("roofline", roofline),
 ]
 
 BACKENDS_JSON = "BENCH_backends.json"
 SPGEMM_JSON = "BENCH_spgemm.json"
+SERVING_JSON = serving_bench.DEFAULT_JSON
+
+# the tracked perf-trajectory emitters: (json path, collect, write)
+TRAJECTORY = [
+    ("backends", BACKENDS_JSON,
+     lambda: backend_sweep.write_json(BACKENDS_JSON, backend_sweep.collect())),
+    ("spgemm", SPGEMM_JSON,
+     lambda: spgemm_sweep.write_json(SPGEMM_JSON, spgemm_sweep.collect())),
+    ("serving", SERVING_JSON,
+     lambda: serving_bench.write_json(SERVING_JSON, serving_bench.collect())),
+]
+
+
+def _run_trajectory(names) -> int:
+    failures = 0
+    for name, path, emit in TRAJECTORY:
+        if names is not None and name not in names:
+            continue
+        try:
+            emit()
+            print(f"wrote {path}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    return failures
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serving", action="store_true",
+                    help="only the serving engine benchmark "
+                         "(BENCH_serving.json)")
+    ap.add_argument("--backends", action="store_true",
+                    help="only the sparse-backend sweep "
+                         "(BENCH_backends.json)")
+    ap.add_argument("--spgemm", action="store_true",
+                    help="only the SpGEMM engine sweep (BENCH_spgemm.json)")
+    args = ap.parse_args()
+
+    only = [n for n, flag in (("serving", args.serving),
+                              ("backends", args.backends),
+                              ("spgemm", args.spgemm)) if flag]
+    if only:
+        sys.exit(1 if _run_trajectory(only) else 0)
+
     failures = 0
     for name, mod in MODULES:
         print(f"\n### {name}")
         t0 = time.time()
         try:
-            mod.main()
+            if mod is serving_bench:
+                mod.main([])          # don't re-parse run.py's argv
+            else:
+                mod.main()
             print(f"### {name} done in {time.time() - t0:.1f}s")
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"### {name} FAILED")
             traceback.print_exc()
-    try:  # per-backend perf trajectory, tracked from PR 1 onward
-        backend_sweep.write_json(BACKENDS_JSON, backend_sweep.collect())
-        print(f"\nwrote {BACKENDS_JSON}")
-    except Exception:  # noqa: BLE001
-        failures += 1
-        traceback.print_exc()
-    try:  # sparse×sparse engine trajectory, tracked from PR 3 onward
-        spgemm_sweep.write_json(SPGEMM_JSON, spgemm_sweep.collect())
-        print(f"wrote {SPGEMM_JSON}")
-    except Exception:  # noqa: BLE001
-        failures += 1
-        traceback.print_exc()
+    # perf trajectory, tracked from PR 1 (backends), PR 3 (spgemm),
+    # PR 4 (serving) onward — serving_bench.main() already wrote its JSON
+    failures += _run_trajectory(("backends", "spgemm"))
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,190 @@
+"""Serving benchmark — dynamic-batched GNN inference vs one-at-a-time.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench            # table + JSON
+  PYTHONPATH=src python -m benchmarks.serving_bench --check-json BENCH_serving.json
+
+Per (arch, backend): stand up a ``GNNServer`` over a synthetic power-law
+resident graph, warm the bucket ladder, fire a seeded burst of requests,
+and record req/s, latency percentiles, bucket hit-rates, and the recompile
+counter; then replay the SAME sampled trees offline (one request at a time
+through the bucket-1 step) for the throughput baseline and the ≤1e-5
+parity anchor.  Results go to ``BENCH_serving.json`` (atomic write);
+``--check``/``--check-json`` is CI's serving gate: parity, zero post-warmup
+recompiles, minimum batched speedup, and a p99 sanity bound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+DEFAULT_JSON = "BENCH_serving.json"
+# (arch, backend) cells measured by default — pallas runs in interpret mode
+# on CPU, so one pallas cell tracks the kernel path without drowning CI
+DEFAULT_CELLS = (("gcn", "dense"), ("gcn", "pallas"), ("sage", "dense"),
+                 ("gin", "dense"))
+
+
+def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
+               d_in=32, fanouts=(5, 3), max_batch=16, max_wait_ms=2.0,
+               n_requests=96, n_offline=32, workers=2, seed=0) -> dict:
+    from repro.launch.gnn_serve import build_world
+    from repro.serve import GNNServer
+    from repro.serve.engine import offline_replay
+
+    cfg, params, indptr, indices, store = build_world(
+        arch, n_nodes, n_edges, d_in, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    seeds = rng.integers(0, n_nodes, n_requests)
+
+    server = GNNServer(arch, cfg, params, indptr, indices, store,
+                       fanouts=fanouts, backend=backend,
+                       max_batch_seeds=max_batch, max_wait_ms=max_wait_ms,
+                       n_workers=workers, seed=seed)
+    with server:
+        server.warmup()
+        # steady-state warm phase: a throwaway burst exercises the whole
+        # pipeline (threads, allocator, XLA dispatch) so the measured burst
+        # sees the server as live traffic would
+        for w in [server.submit([int(s)]) for s in seeds[:32]]:
+            w.wait(600)
+        warm_builds = server.steps.builds
+        server.reset_stats()
+        t0 = time.perf_counter()
+        reqs = [server.submit([int(s)]) for s in seeds]
+        server.drain(timeout=600)
+        dt_batched = time.perf_counter() - t0
+        st = server.stats()
+        recompiles_steady = server.steps.builds - warm_builds
+
+        # offline baseline: the full one-request-at-a-time pipeline —
+        # re-sample each request's trees through the deterministic data
+        # plane, then the bucket-1 step per tree.  A subset bounds CI
+        # wall-time; throughput extrapolates linearly (every request is the
+        # identical fixed-shape work).  Parity doubles as the replay check:
+        # it only holds if re-sampling reproduced the served trees.
+        sub = reqs[:n_offline]
+        t0 = time.perf_counter()
+        ref = np.concatenate([offline_replay(server, r) for r in sub])
+        dt_offline = time.perf_counter() - t0
+        got = np.concatenate([r.result for r in sub])
+        parity = float(np.abs(got - ref).max())
+
+    reqs_per_s = n_requests / dt_batched
+    offline_reqs_per_s = len(sub) / dt_offline
+    return {
+        "arch": arch, "backend": backend,
+        "n_nodes": n_nodes, "n_edges": n_edges, "fanouts": list(fanouts),
+        "max_batch_seeds": max_batch, "n_requests": n_requests,
+        "reqs_per_s": round(reqs_per_s, 2),
+        "p50_ms": round(st["p50_ms"], 3),
+        "p95_ms": round(st["p95_ms"], 3),
+        "p99_ms": round(st["p99_ms"], 3),
+        "n_batches": st["n_batches"],
+        "bucket_counts": {str(k): v for k, v in
+                          sorted(st["bucket_counts"].items())},
+        "bucket_hit_rate": round(st["bucket_hits"] / max(st["n_batches"], 1),
+                                 4),
+        "recompiles_warmup": warm_builds,
+        "recompiles_steady_state": recompiles_steady,
+        "offline_reqs_per_s": round(offline_reqs_per_s, 2),
+        "speedup_vs_offline": round(reqs_per_s / offline_reqs_per_s, 2),
+        "parity_max_dev_vs_offline": parity,
+    }
+
+
+def collect(cells=DEFAULT_CELLS, **kw) -> dict:
+    records = []
+    for arch, backend in cells:
+        records.append(bench_cell(arch, backend, **kw))
+        r = records[-1]
+        print(f"  {arch:8s} {backend:8s} {r['reqs_per_s']:9.1f} req/s  "
+              f"p50 {r['p50_ms']:7.1f}ms  p99 {r['p99_ms']:7.1f}ms  "
+              f"offline {r['offline_reqs_per_s']:7.1f} req/s  "
+              f"speedup {r['speedup_vs_offline']:5.2f}x  "
+              f"parity {r['parity_max_dev_vs_offline']:.1e}  "
+              f"recompiles {r['recompiles_steady_state']}")
+    return {"bench": "serving", "records": records}
+
+
+def write_json(path: str, data: dict):
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
+          p99_cap_ms: float = 60_000.0) -> int:
+    """CI gate: parity, zero steady-state recompiles, batched win, p99 sane."""
+    failures = 0
+    for r in data["records"]:
+        cell = f"{r['arch']}/{r['backend']}"
+        if r["parity_max_dev_vs_offline"] > tol:
+            print(f"FAIL {cell}: parity {r['parity_max_dev_vs_offline']:.2e} "
+                  f"> {tol:.0e}")
+            failures += 1
+        if r["recompiles_steady_state"] != 0:
+            print(f"FAIL {cell}: {r['recompiles_steady_state']} steady-state "
+                  "recompiles (want 0 after bucket warm-up)")
+            failures += 1
+        if r["speedup_vs_offline"] < min_speedup:
+            print(f"FAIL {cell}: batched speedup {r['speedup_vs_offline']}x "
+                  f"< {min_speedup}x vs one-request-at-a-time")
+            failures += 1
+        if not (0 < r["p99_ms"] <= p99_cap_ms):
+            print(f"FAIL {cell}: p99 {r['p99_ms']}ms outside "
+                  f"(0, {p99_cap_ms}ms]")
+            failures += 1
+    if not failures:
+        print(f"serving gate OK: {len(data['records'])} cells, parity ≤ "
+              f"{tol:.0e}, 0 steady-state recompiles, "
+              f"speedup ≥ {min_speedup}x")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help=f"also write records to this path "
+                         f"(default {DEFAULT_JSON} when run as a module)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the gate on freshly collected records")
+    ap.add_argument("--check-json", default=None, metavar="PATH",
+                    help="gate an existing BENCH_serving.json (no re-run)")
+    ap.add_argument("--min-speedup", type=float, default=3.0)
+    ap.add_argument("--p99-cap-ms", type=float, default=60_000.0)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--cells", default=None,
+                    help="comma list of arch:backend pairs, e.g. "
+                         "gcn:dense,sage:pallas")
+    args = ap.parse_args(argv)
+
+    if args.check_json:
+        with open(args.check_json) as f:
+            data = json.load(f)
+        return 1 if check(data, min_speedup=args.min_speedup,
+                          p99_cap_ms=args.p99_cap_ms) else 0
+
+    cells = DEFAULT_CELLS
+    if args.cells:
+        cells = tuple(tuple(c.split(":")) for c in args.cells.split(","))
+    print("arch     backend     req/s        p50       p99    offline  "
+          "speedup  parity  recompiles")
+    data = collect(cells, n_requests=args.requests)
+    path = args.json or DEFAULT_JSON
+    write_json(path, data)
+    print(f"wrote {path}")
+    if args.check:
+        return 1 if check(data, min_speedup=args.min_speedup,
+                          p99_cap_ms=args.p99_cap_ms) else 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,4 @@
-"""Serve a small LM with batched requests (prefill + KV-cache decode).
+"""Serve a small LM through the continuous-batching engine.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -7,6 +7,6 @@ import sys
 from repro.launch import serve
 
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--batch", "8", "--prompt-len", "64",
-                "--gen", "32"] + sys.argv[1:]
+    sys.argv = [sys.argv[0], "--requests", "8", "--slots", "4",
+                "--prompt-len", "64", "--gen", "32"] + sys.argv[1:]
     raise SystemExit(serve.main())

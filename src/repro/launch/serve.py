@@ -1,11 +1,15 @@
-"""Batched serving driver: prefill + decode loop with a KV cache.
+"""LM serving driver — continuous batching over decode slots.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-      --batch 8 --prompt-len 64 --gen 32
+      --requests 8 --slots 4 --prompt-len 64 --gen 32
 
-Uses the reduced config on CPU (the full configs are exercised via the
-dry-run); the serving logic — prefill to fill the cache, then step-wise
-greedy decode over a request batch — is the production path.
+One serving path in the repo: this driver builds (prefill, ragged-decode)
+step functions and hands scheduling to ``repro.train.serving``'s
+``ContinuousBatcher`` — the slot-pool engine the serving tests hold
+bit-equal to offline decoding — instead of carrying its own prefill/decode
+loop.  Requests with mixed prompt/generation lengths join free slots as
+earlier ones finish (no head-of-line blocking); the scheduler utilities are
+shared with the GNN serving engine (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -13,39 +17,31 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
 from repro.data import synthetic as syn
 from repro.models.lm import transformer as T
+from repro.train.serving import ContinuousBatcher, Request
 
 
-def serve_batch(params, cfg, prompts: jax.Array, s_max: int, gen: int):
-    """prompts: (B, P) → generated tokens (B, gen)."""
-    b, p = prompts.shape
-    logits, kv = T.prefill(params, cfg, prompts)
-    # prefill returns per-layer (B, P, KV, hd); place into an s_max cache
-    cache = T.init_cache(cfg, b, s_max)
-    cache = jax.tree.map(
-        lambda dst, src: jax.lax.dynamic_update_slice(
-            dst, src.astype(dst.dtype), (0,) * dst.ndim),
-        cache, kv)
-
-    decode = jax.jit(lambda pr, tok, c, i: T.decode_step(pr, cfg, tok, c, i))
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    for i in range(gen - 1):
-        logits, cache = decode(params, tok, cache, jnp.int32(p + i))
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+def build_engine(params, cfg, n_slots: int, s_max: int,
+                 eos_id=None) -> ContinuousBatcher:
+    """ContinuousBatcher over jitted (prefill, ragged decode) for ``cfg``."""
+    prefill = jax.jit(lambda t: T.prefill(params, cfg, t))
+    decode = jax.jit(
+        lambda tok, cache, pos: T.decode_step_ragged(params, cfg, tok, cache,
+                                                     pos))
+    return ContinuousBatcher(n_slots, s_max,
+                             lambda b, s: T.init_cache(cfg, b, s),
+                             prefill, decode, eos_id=eos_id)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
@@ -53,17 +49,35 @@ def main():
 
     cfg = registry.get_config(args.arch, reduced=True)
     params = T.init_params(jax.random.key(args.seed), cfg)
-    prompts = jnp.asarray(syn.token_batch(args.batch, args.prompt_len,
-                                          cfg.vocab, seed=args.seed))
-    s_max = args.prompt_len + args.gen
+    s_max = args.prompt_len + args.gen + 1
+    eng = build_engine(params, cfg, args.slots, s_max)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        # mixed lengths: the slot pool's freed lanes re-admit waiting
+        # requests mid-flight — the continuous-batching property
+        p = max(4, args.prompt_len - 7 * (i % 3))
+        g = max(2, args.gen - 5 * (i % 4))
+        prompt = syn.token_batch(1, p, cfg.vocab, seed=args.seed + i)[0]
+        req = Request(rid=i, prompt=prompt, max_new=g)
+        reqs.append(req)
+        eng.submit(req)
+
     t0 = time.time()
-    toks = serve_batch(params, cfg, prompts, s_max, args.gen)
+    steps = 0
+    while eng.active or eng.queue:
+        eng.step()
+        steps += 1
     dt = time.time() - t0
-    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab)))
-    rate = args.batch * args.gen / dt
-    print(f"[serve] {args.arch} (reduced): batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen} → {dt:.2f}s "
-          f"({rate:.0f} tok/s)  sample: {np.asarray(toks[0, :8]).tolist()}")
+
+    n_tok = sum(len(r.out) for r in reqs)
+    assert all(r.done for r in reqs)
+    assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
+    print(f"[serve] {args.arch} (reduced): {args.requests} requests on "
+          f"{args.slots} slots → {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.0f} tok/s, {steps} engine steps)  "
+          f"sample: {reqs[0].out[:8]}")
     return 0
 
 

@@ -1,0 +1,33 @@
+"""GNN inference serving engine (DESIGN.md §10).
+
+Four planes over the engines PRs 1–3 built:
+
+* request plane  — ``batcher.DynamicBatcher`` (deadline/size triggers,
+                   skip-ahead FIFO packing — no head-of-line blocking) on the
+                   scheduler utilities shared with the LM continuous batcher;
+* data plane     — per-request fanout sampling (``sparse.sampler``) on worker
+                   threads, stacked into power-of-two **shape buckets** so the
+                   jit/plan caches stay bounded;
+* compute plane  — one jitted inference step per (arch, bucket, backend)
+                   through the unified sparse-backend registry, LRU-cached
+                   with an explicit recompile counter;
+* measurement    — ``benchmarks/serving_bench.py`` → ``BENCH_serving.json``.
+
+Correctness anchor: batched-bucketed serving is parity-checked (≤1e-5)
+against offline one-request-at-a-time inference on the same sampled trees.
+"""
+from repro.serve.batcher import DynamicBatcher, ServeRequest
+from repro.serve.buckets import (BucketStructure, bucket_for,
+                                 build_bucket_structure, stack_trees)
+from repro.serve.compute import (FeatureStore, StepCache, build_infer_step)
+from repro.serve.engine import (GNNServer, offline_inference,
+                                offline_replay)
+from repro.serve.scheduler import SlotPool, pack_fifo
+
+__all__ = [
+    "DynamicBatcher", "ServeRequest",
+    "BucketStructure", "bucket_for", "build_bucket_structure", "stack_trees",
+    "FeatureStore", "StepCache", "build_infer_step",
+    "GNNServer", "offline_inference", "offline_replay",
+    "SlotPool", "pack_fifo",
+]

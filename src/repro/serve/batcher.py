@@ -1,0 +1,164 @@
+"""Request plane: host-side dynamic batcher for GNN inference.
+
+Seed-node requests coalesce into minibatches under two triggers:
+
+* **size** — pending seed count reaches ``max_seeds`` (a full bucket);
+* **deadline** — the oldest pending request has waited ``max_wait`` seconds
+  (bounded tail latency: a lone request never waits for a full batch).
+
+Packing is skip-ahead FIFO (``scheduler.pack_fifo``): a request that does
+not fit the remaining seed budget stays at the front of the line while
+later, smaller requests may still ride along — no head-of-line blocking.
+
+The batcher is pure host logic with an injectable ``clock`` so the property
+tests drive it on virtual time; thread-safety (one lock + condition) is for
+the engine's sampler workers and compute loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serve.scheduler import pack_fifo
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request: return embeddings/logits for ``seeds``."""
+
+    rid: int
+    seeds: np.ndarray                 # (k,) int64 seed node ids
+    t_submit: float = 0.0             # clock time at submit
+    t_ready: float = 0.0              # sampling finished, joined the queue
+    t_done: float = 0.0               # result materialized
+    trees: Optional[list] = None      # per-seed SampledSubgraph (data plane)
+    result: Optional[np.ndarray] = None  # (k, d_out) seed outputs
+    error: Optional[BaseException] = None  # pipeline failure, re-raised
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    @property
+    def n_seeds(self) -> int:
+        return int(np.asarray(self.seeds).shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    def finish(self, result: np.ndarray, t_done: float):
+        self.result = result
+        self.t_done = t_done
+        self._event.set()
+
+    def fail(self, exc: BaseException, t_done: float):
+        """Mark the request failed — ``wait`` re-raises instead of hanging."""
+        self.error = exc
+        self.t_done = t_done
+        self._event.set()
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served in {timeout}s")
+        if self.error is not None:
+            raise RuntimeError(
+                f"request {self.rid} failed in the serving pipeline"
+            ) from self.error
+        return self.result
+
+
+class DynamicBatcher:
+    """Deadline- or size-triggered batch former over a FIFO of requests."""
+
+    def __init__(self, max_seeds: int, max_wait: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_seeds <= 0:
+            raise ValueError(f"max_seeds must be positive, got {max_seeds}")
+        self.max_seeds = max_seeds
+        self.max_wait = float(max_wait)
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: List[ServeRequest] = []
+        self.n_submitted = 0
+        self.n_batches = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def submit(self, req: ServeRequest):
+        """Enqueue a sampled request (called by the data plane)."""
+        if req.n_seeds > self.max_seeds:
+            raise ValueError(
+                f"request {req.rid} carries {req.n_seeds} seeds but the "
+                f"batcher's bucket capacity is {self.max_seeds}")
+        req.t_ready = self.clock()
+        with self._cond:
+            self._pending.append(req)
+            self.n_submitted += 1
+            self._cond.notify()
+
+    # -- trigger logic (lock held) ------------------------------------------
+    def _ripe(self, now: float) -> bool:
+        if not self._pending:
+            return False
+        if sum(r.n_seeds for r in self._pending) >= self.max_seeds:
+            return True                                   # size trigger
+        return now - self._pending[0].t_ready >= self.max_wait  # deadline
+
+    def _take(self) -> List[ServeRequest]:
+        taken, self._pending, _ = pack_fifo(
+            self._pending, self.max_seeds, size_of=lambda r: r.n_seeds)
+        self.n_batches += 1
+        return taken
+
+    # -- consumers ----------------------------------------------------------
+    def poll(self) -> Optional[List[ServeRequest]]:
+        """Non-blocking: a batch if a trigger has fired, else ``None``."""
+        with self._lock:
+            if self._ripe(self.clock()):
+                return self._take()
+            return None
+
+    def take(self, timeout: Optional[float] = None
+             ) -> Optional[List[ServeRequest]]:
+        """Block until a trigger fires (or ``timeout``); the engine loop's
+        entry point.  Returns ``None`` on timeout with nothing ripe."""
+        deadline = None if timeout is None else self.clock() + timeout
+        with self._cond:
+            while True:
+                now = self.clock()
+                if self._ripe(now):
+                    return self._take()
+                # sleep until the oldest request's deadline or the caller's
+                waits = []
+                if self._pending:
+                    waits.append(
+                        self._pending[0].t_ready + self.max_wait - now)
+                if deadline is not None:
+                    if now >= deadline and not waits:
+                        return None
+                    waits.append(deadline - now)
+                if not waits:
+                    self._cond.wait()
+                    continue
+                wait = max(min(waits), 0.0)
+                if wait == 0.0 and deadline is not None and now >= deadline:
+                    return None
+                self._cond.wait(timeout=wait if wait > 0 else 1e-4)
+
+    def flush(self) -> List[List[ServeRequest]]:
+        """Drain everything pending into batches (shutdown path)."""
+        out = []
+        with self._lock:
+            while self._pending:
+                out.append(self._take())
+        return out

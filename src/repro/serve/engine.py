@@ -1,0 +1,364 @@
+"""The GNN inference server: request + data + compute planes wired up.
+
+``GNNServer`` owns a resident graph (host CSR for the sampler, device
+``FeatureStore`` for the models) and serves seed-node requests:
+
+1. ``submit(seeds)`` hands the request to sampler **worker threads** — one
+   fanout tree per seed (``sparse.sampler``), per-request deterministic rng
+   so offline replay sees identical subgraphs;
+2. sampled requests join the ``DynamicBatcher`` (deadline/size triggers);
+3. the engine thread stacks a batch's trees into the request-count bucket
+   (``bucket_for`` → power of two, bounded jit-cache key space), fetches the
+   bucket's step from the ``StepCache`` and dispatches it.  JAX's async
+   dispatch plus an in-flight queue of depth 2 double-buffers host sampling
+   and batch assembly against device compute;
+4. results scatter back per request (seed rows of the bucket output) and
+   the request's latency clock stops.
+
+``offline_inference`` is the correctness anchor: the same trees, one
+request at a time through the bucket-1 step — serving output must match it
+to ≤1e-5.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.batcher import DynamicBatcher, ServeRequest
+from repro.serve.buckets import (all_buckets, bucket_for,
+                                 build_bucket_structure, stack_trees)
+from repro.serve.compute import (FeatureStore, StepCache, _arch_key,
+                                 build_infer_step)
+from repro.sparse import sampler
+
+
+def _needs_loops(arch_id: str) -> bool:
+    return _arch_key(arch_id) == "gcn"
+
+
+class GNNServer:
+    """Dynamic-batching inference server over a resident graph."""
+
+    def __init__(self, arch_id: str, cfg, params, indptr: np.ndarray,
+                 indices: np.ndarray, store: FeatureStore, *,
+                 fanouts: Sequence[int] = (5, 3), backend: str = "dense",
+                 max_batch_seeds: int = 16, max_wait_ms: float = 5.0,
+                 n_workers: int = 2, seed: int = 0,
+                 step_cache_size: int = 16, inflight: int = 2,
+                 clock=time.monotonic):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.params = params
+        self.indptr = np.asarray(indptr)
+        self.indices = np.asarray(indices)
+        self.store = store
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.backend = backend
+        self.max_batch_seeds = int(max_batch_seeds)
+        self.seed = seed
+        self.clock = clock
+        self.inflight_depth = max(int(inflight), 1)
+
+        self.batcher = DynamicBatcher(self.max_batch_seeds,
+                                      max_wait_ms / 1e3, clock=clock)
+        self.steps = StepCache(self._build_step, maxsize=step_cache_size)
+        self._structs: Dict[int, object] = {}
+
+        self._rid_lock = threading.Lock()
+        self._next_rid = 0
+        self.requests: Dict[int, ServeRequest] = {}
+
+        # metrics — latencies keep a sliding window so a long-lived server
+        # doesn't grow without bound; percentiles are over recent traffic
+        self._stats_lock = threading.Lock()
+        self.bucket_counts: Dict[int, int] = collections.Counter()
+        self.bucket_hits = 0            # batches landing in a warm bucket
+        self.n_served = 0
+        self.latencies: "collections.deque[float]" = collections.deque(
+            maxlen=4096)
+
+        # data plane: sampler workers
+        self._sample_q: "queue.Queue[Optional[ServeRequest]]" = queue.Queue()
+        self._workers = [threading.Thread(target=self._sample_worker,
+                                          daemon=True,
+                                          name=f"gnn-serve-sampler-{i}")
+                         for i in range(max(int(n_workers), 1))]
+        # compute plane: engine loop + in-flight double buffer
+        self._closing = False
+        self._stop = threading.Event()
+        self._inflight: "collections.deque" = collections.deque()
+        self._engine = threading.Thread(target=self._engine_loop, daemon=True,
+                                        name="gnn-serve-engine")
+        for w in self._workers:
+            w.start()
+        self._engine.start()
+
+    # -- request plane ------------------------------------------------------
+    def submit(self, seeds) -> ServeRequest:
+        if self._closing:
+            raise RuntimeError("server is closed; no worker will serve this")
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        # reject malformed requests synchronously — an exception past this
+        # point would land in a worker thread instead of the caller
+        n_graph = self.indptr.shape[0] - 1
+        if seeds.size == 0 or seeds.size > self.max_batch_seeds:
+            raise ValueError(
+                f"request carries {seeds.size} seeds; must be in "
+                f"[1, {self.max_batch_seeds}] (the bucket cap)")
+        if (seeds < 0).any() or (seeds >= n_graph).any():
+            raise ValueError(
+                f"seed ids {seeds[(seeds < 0) | (seeds >= n_graph)]} out of "
+                f"range for the resident graph ({n_graph} nodes)")
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
+            self.requests[rid] = req
+        self._sample_q.put(req)
+        return req
+
+    # -- data plane ---------------------------------------------------------
+    def _tree_keys(self, rid: int, n: int) -> np.ndarray:
+        # one counter-hash stream per (request, seed index): deterministic,
+        # independent of how requests group into sampling calls
+        return (np.uint64(rid) << np.uint64(16)) + np.arange(
+            n, dtype=np.uint64)
+
+    def _sample_group(self, group):
+        seeds_all = np.concatenate([r.seeds for r in group])
+        keys = np.concatenate([self._tree_keys(r.rid, r.n_seeds)
+                               for r in group])
+        trees = sampler.sample_forest(self.indptr, self.indices, seeds_all,
+                                      self.fanouts, key=self.seed,
+                                      tree_keys=keys)
+        i = 0
+        for req in group:                     # assign everything first so a
+            req.trees = trees[i:i + req.n_seeds]  # failure submits nothing
+            i += req.n_seeds
+        for req in group:
+            self.batcher.submit(req)
+
+    def _fail_requests(self, reqs, exc: BaseException):
+        now = self.clock()
+        with self._rid_lock:
+            for req in reqs:
+                self.requests.pop(req.rid, None)
+        for req in reqs:
+            req.fail(exc, now)
+
+    def _sample_worker(self):
+        while True:
+            req = self._sample_q.get()
+            if req is None:
+                return
+            # drain whatever else is queued: the counter-based draws make
+            # grouped sampling identical to per-request sampling, so the
+            # vectorized forest pass is free parallelism
+            group = [req]
+            while len(group) < 64:
+                try:
+                    nxt = self._sample_q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:           # shutdown sentinel: hand it back
+                    self._sample_q.put(None)
+                    break
+                group.append(nxt)
+            try:
+                self._sample_group(group)
+            except Exception:  # noqa: BLE001 — isolate the bad request(s);
+                # the worker lane (and every later request routed to it)
+                # must survive, and innocent groupmates must still serve
+                for r in group:
+                    try:
+                        self._sample_group([r])
+                    except Exception as exc:  # noqa: BLE001
+                        self._fail_requests([r], exc)
+
+    def sample_for(self, seeds, rid: int) -> list:
+        """The data plane's sampling, re-runnable offline (parity anchor)."""
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        return sampler.sample_forest(self.indptr, self.indices, seeds,
+                                     self.fanouts, key=self.seed,
+                                     tree_keys=self._tree_keys(
+                                         rid, seeds.shape[0]))
+
+    # -- compute plane ------------------------------------------------------
+    def _build_step(self, key: tuple):
+        (bucket,) = key
+        struct = self._struct(bucket)
+        return build_infer_step(self.arch_id, self.cfg, self.store, struct,
+                                backend=self.backend)
+
+    def _struct(self, bucket: int):
+        if bucket not in self._structs:
+            self._structs[bucket] = build_bucket_structure(
+                bucket, self.fanouts, with_loops=_needs_loops(self.arch_id))
+        return self._structs[bucket]
+
+    def _dispatch(self, batch: List[ServeRequest]):
+        trees = [t for r in batch for t in r.trees]
+        bucket = bucket_for(len(trees), self.max_batch_seeds)
+        warm = self.steps.builds
+        step = self.steps.get((bucket,))
+        node_ids, hop_valid = stack_trees(trees, bucket, self.fanouts)
+        out = step(self.params, node_ids, hop_valid)   # async dispatch
+        with self._stats_lock:
+            self.bucket_counts[bucket] += 1
+            self.bucket_hits += int(self.steps.builds == warm)
+        self._inflight.append((batch, out))
+        while len(self._inflight) > self.inflight_depth:
+            self._finalize_one()
+
+    def _finalize_one(self):
+        batch, out = self._inflight.popleft()
+        out = np.asarray(out)                          # device sync
+        now = self.clock()
+        row = 0
+        for req in batch:
+            k = req.n_seeds
+            req.finish(out[row:row + k].copy(), now)
+            row += k
+        with self._rid_lock:
+            # results live on the request objects; the server-side index
+            # must not grow without bound under sustained traffic
+            for req in batch:
+                self.requests.pop(req.rid, None)
+        with self._stats_lock:
+            self.n_served += len(batch)
+            self.latencies.extend(r.latency for r in batch)
+
+    def _engine_loop(self):
+        while not self._stop.is_set():
+            if self._inflight:
+                # work is on the device: only grab a ripe batch, otherwise
+                # retire the oldest in-flight batch (its sync overlaps the
+                # sampler workers filling the queue)
+                batch = self.batcher.poll()
+                if batch is None:
+                    self._finalize_one()
+                    continue
+            else:
+                batch = self.batcher.take(timeout=0.02)
+            if batch:
+                self._dispatch(batch)
+        for batch in self.batcher.flush():
+            self._dispatch(batch)
+        while self._inflight:
+            self._finalize_one()
+
+    # -- lifecycle / utilities ---------------------------------------------
+    def warmup(self, buckets: Optional[Sequence[int]] = None):
+        """Compile the bucket ladder ahead of traffic and run one dummy
+        batch through each step (jit trace + compile happen on first call)."""
+        buckets = (all_buckets(self.max_batch_seeds) if buckets is None
+                   else buckets)
+        for b in buckets:
+            step = self.steps.get((b,))
+            struct = self._struct(b)
+            node_ids = np.full(struct.n_nodes, -1, np.int64)
+            hop_valid = np.zeros(struct.n_hop_edges, bool)
+            np.asarray(step(self.params, node_ids, hop_valid))
+
+    def drain(self, timeout: float = 60.0):
+        """Block until every submitted request has a result."""
+        deadline = time.monotonic() + timeout
+        with self._rid_lock:
+            pending = list(self.requests.values())
+        for req in pending:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise TimeoutError("drain timed out")
+            req.wait(left)
+
+    def reset_stats(self):
+        with self._stats_lock:
+            self.bucket_counts.clear()
+            self.bucket_hits = 0
+            self.n_served = 0
+            self.latencies.clear()
+
+    def stats(self) -> dict:
+        with self._stats_lock:
+            lat = np.asarray(self.latencies, np.float64)
+
+            def pct(q):
+                return float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
+            return {
+                "n_served": self.n_served,
+                "n_batches": int(sum(self.bucket_counts.values())),
+                "bucket_counts": dict(self.bucket_counts),
+                "bucket_hits": self.bucket_hits,
+                "recompiles": self.steps.builds,
+                "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+            }
+
+    def close(self):
+        """Graceful shutdown: everything submitted before ``close`` is still
+        served.  Order matters — samplers stop FIRST, so no request can
+        reach the batcher after the engine thread's final flush."""
+        if self._closing:
+            return
+        self._closing = True              # reject new submissions from here
+        for _ in self._workers:
+            self._sample_q.put(None)
+        for w in self._workers:
+            # unbounded: a worker always terminates (its group is bounded
+            # and sampling is finite) — a timed join that gave up would let
+            # the straggler submit to a batcher nobody reads anymore
+            w.join()
+        # anything still queued (e.g. parked behind a sentinel) samples
+        # inline on this thread before the engine flushes
+        leftovers = []
+        while True:
+            try:
+                item = self._sample_q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                leftovers.append(item)
+        if leftovers:
+            try:
+                self._sample_group(leftovers)
+            except Exception:  # noqa: BLE001
+                for r in leftovers:
+                    try:
+                        self._sample_group([r])
+                    except Exception as exc:  # noqa: BLE001
+                        self._fail_requests([r], exc)
+        self._stop.set()
+        self._engine.join()               # exits within one poll interval
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def offline_inference(server: GNNServer, trees: list) -> np.ndarray:
+    """One-request-at-a-time reference: each tree through the bucket-1 step.
+
+    Uses the server's own step cache (bucket 1), so it measures exactly the
+    unbatched serving path; returns the stacked (n_trees, d_out) outputs.
+    """
+    step = server.steps.get((1,))
+    out = []
+    for tree in trees:
+        node_ids, hop_valid = stack_trees([tree], 1, server.fanouts)
+        out.append(np.asarray(step(server.params, node_ids, hop_valid)))
+    return np.concatenate(out, axis=0)
+
+
+def offline_replay(server: GNNServer, req: ServeRequest) -> np.ndarray:
+    """The full unbatched pipeline for one request: re-sample its trees
+    through the data plane's deterministic streams, then infer one tree at
+    a time.  Must equal ``req.result`` to ≤1e-5 — the serving parity
+    contract — and is the throughput baseline batching is measured against.
+    """
+    return offline_inference(server, server.sample_for(req.seeds, req.rid))

@@ -1,0 +1,85 @@
+"""Scheduler primitives shared by every serving engine in the repo.
+
+The LM continuous batcher (``repro.train.serving``) and the GNN dynamic
+batcher (``repro.serve.batcher``) schedule the same way — a FIFO of pending
+requests packed greedily into bounded capacity, with no head-of-line
+blocking — they just differ in what "capacity" means (free decode slots vs
+seed budget of a shape bucket).  This module holds the shared pieces.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+def pack_fifo(pending: Sequence, capacity: int,
+              size_of: Callable = lambda _r: 1,
+              skip_ahead: bool = True) -> Tuple[List, List, int]:
+    """Greedy FIFO packing: ``(taken, remaining, used)``.
+
+    Requests are taken in arrival order while they fit in ``capacity``.
+    With ``skip_ahead`` (the default), a request that does not fit is left
+    in place and *later, smaller* requests may still fill the gap — the
+    oversized request cannot block the line (it stays at the front for the
+    next batch, so it is never starved either).  ``skip_ahead=False`` gives
+    strict FIFO (stop at the first misfit).
+    """
+    taken: List = []
+    remaining: List = []
+    used = 0
+    blocked = False
+    for req in pending:
+        size = size_of(req)
+        if not blocked and used + size <= capacity:
+            taken.append(req)
+            used += size
+        else:
+            remaining.append(req)
+            if not skip_ahead:
+                blocked = True
+    return taken, remaining, used
+
+
+class SlotPool:
+    """Fixed pool of serving lanes; ``acquire`` binds a request id to a free
+    slot, ``release`` frees it immediately for the next waiter.
+
+    This is the slot bookkeeping of the continuous batcher, extracted so the
+    GNN engine's bucket lanes and the LM engine's decode lanes share one
+    audited implementation.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self._rids: List[Optional[object]] = [None] * n_slots
+
+    @property
+    def n_slots(self) -> int:
+        return len(self._rids)
+
+    @property
+    def free_count(self) -> int:
+        return sum(1 for r in self._rids if r is None)
+
+    def acquire(self, rid) -> Optional[int]:
+        """Bind ``rid`` to the lowest free slot; ``None`` when full."""
+        for i, r in enumerate(self._rids):
+            if r is None:
+                self._rids[i] = rid
+                return i
+        return None
+
+    def release(self, slot: int):
+        """Free ``slot`` and return the rid it carried."""
+        rid = self._rids[slot]
+        if rid is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._rids[slot] = None
+        return rid
+
+    def rid_of(self, slot: int):
+        return self._rids[slot]
+
+    def live(self) -> List[Tuple[int, object]]:
+        """(slot, rid) pairs of occupied lanes, slot-ordered."""
+        return [(i, r) for i, r in enumerate(self._rids) if r is not None]

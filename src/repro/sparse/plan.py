@@ -253,6 +253,44 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
     return AggregationPlan(**kw)
 
 
+def plan_with_values(plan: AggregationPlan,
+                     edge_weight: Optional[Array] = None,
+                     edge_valid: Optional[Array] = None) -> AggregationPlan:
+    """Trace-safe re-valuation of a static-structure plan.
+
+    Shape-bucketed serving (DESIGN.md §10) builds ONE host plan per bucket
+    — the sampler's slot arithmetic makes every request's sender/receiver
+    indices identical — and only the per-edge weights/validity differ per
+    request.  This swaps those in *inside jit*: the COO ``base_vals``, the
+    pallas coefficient tiles (scatter-added through the plan's slot maps,
+    forward and transpose), and the distributed per-lane values are rebuilt
+    from the traced arrays; every layout index stays the host-packed static
+    data.  Edges invalid in the NEW mask contribute zero on every backend.
+
+    The plan must have been built with all edges valid (so its slot maps
+    cover every edge); parallel duplicate edges share a coefficient cell and
+    their weights sum, matching segment-sum semantics.
+    """
+    valid = plan.valid if edge_valid is None else jnp.asarray(edge_valid)
+    if edge_weight is None:
+        base = valid.astype(jnp.float32)
+    else:
+        base = jnp.where(valid, jnp.asarray(edge_weight), 0.0)
+        base = base.astype(jnp.float32)
+    kw = dict(valid=valid, base_vals=base)
+    if plan.ell_u_cols is not None:
+        for pre in ("ell_", "ell_t_"):
+            a_base = getattr(plan, pre + "a")
+            slots = getattr(plan, pre + "slots")
+            width = a_base.shape[1]
+            kw[pre + "a"] = jnp.zeros_like(a_base).at[
+                slots // width, slots % width].add(base, mode="drop")
+    if plan.dist_rows_local is not None:
+        flat = jnp.zeros((plan.dist_rows_local.shape[0],), jnp.float32)
+        kw["dist_vals"] = flat.at[plan.dist_slots].set(base, mode="drop")
+    return dataclasses.replace(plan, **kw)
+
+
 def plan_from_graph(g, *, n_rows: Optional[int] = None,
                     **kwargs) -> AggregationPlan:
     """Plan for a padded ``Graph``.  ``n_rows`` defaults to ``n_nodes + 1``

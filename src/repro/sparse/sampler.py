@@ -52,6 +52,28 @@ def node_budget(n_seeds: int, fanouts: Sequence[int]) -> int:
     return n_seeds + sum(budget(n_seeds, fanouts))
 
 
+def hop_slots(n_seeds: int, fanouts: Sequence[int]):
+    """Per-hop ``(senders, receivers)`` slot arrays of the breadth-major
+    tree layout — pure arithmetic in ``(n_seeds, fanouts)``.
+
+    This is THE structural invariant the serving engine builds on: every
+    sampled batch of the same shape shares these indices (only node ids
+    and validity differ), so shape buckets can bake them into static plans
+    (``repro.serve.buckets``).  Receivers are the frontier slots repeated
+    ``f`` times; senders are the freshly appended table slots.
+    """
+    out = []
+    base, next_base, nf = 0, n_seeds, n_seeds
+    for f in fanouts:
+        recv = np.repeat(base + np.arange(nf, dtype=np.int64), f)
+        send = next_base + np.arange(nf * f, dtype=np.int64)
+        out.append((send.astype(np.int32), recv.astype(np.int32)))
+        base = next_base
+        next_base += nf * f
+        nf *= f
+    return out
+
+
 def sample_subgraph(indptr: np.ndarray, indices: np.ndarray,
                     seeds: np.ndarray, fanouts: Sequence[int],
                     rng: np.random.Generator) -> SampledSubgraph:
@@ -64,29 +86,135 @@ def sample_subgraph(indptr: np.ndarray, indices: np.ndarray,
     frontier = seeds.astype(np.int64)          # nodes whose neighbors we sample
     table = [seeds.astype(np.int64)]
     hop_s, hop_r, hop_v = [], [], []
-    base = 0                                    # offset of frontier in table
-    next_base = n_seeds
+    slots = hop_slots(n_seeds, fanouts)
+    live = np.ones(n_seeds, bool)               # frontier-lane validity
     for f in fanouts:
         nf = frontier.shape[0]
         deg = indptr[frontier + 1] - indptr[frontier]
         has_nbr = deg > 0
-        # sample f neighbors (with replacement) per frontier node
+        # sample f neighbors (with replacement) per frontier node; a fanout
+        # larger than the degree simply repeats neighbors, so hub and leaf
+        # nodes alike fill their fixed budget
         r = rng.integers(0, np.maximum(deg, 1)[:, None],
                          size=(nf, f))
-        nbr = indices[indptr[frontier][:, None] + r]           # (nf, f)
-        valid = np.broadcast_to(has_nbr[:, None], (nf, f)).copy()
+        if indices.size:
+            # zero-degree nodes draw a clipped dummy index (masked invalid
+            # below) — without the clip an isolated node whose CSR slice
+            # starts at the very end of `indices` reads out of bounds
+            gather = np.minimum(indptr[frontier][:, None] + r,
+                                indices.size - 1)
+            nbr = indices[gather]                              # (nf, f)
+        else:                                   # edgeless graph: all invalid
+            nbr = np.zeros((nf, f), dtype=np.int64)
+        # an edge is valid iff its frontier node has neighbors AND the
+        # frontier lane itself is live — children of a dead lane (isolated
+        # node, or padding deeper in the tree) must not masquerade as real
+        valid = (has_nbr & live)[:, None] & np.ones((nf, f), bool)
         nbr = np.where(valid, nbr, -1)
-        # receivers are positions of the frontier nodes in the table
-        recv = np.broadcast_to((base + np.arange(nf))[:, None], (nf, f))
-        send = next_base + np.arange(nf * f).reshape(nf, f)    # fresh slots
+        # sender/receiver slots: the shared breadth-major arithmetic
+        send, recv = slots[len(hop_s)]
         table.append(nbr.reshape(-1))
-        hop_s.append(send.reshape(-1).astype(np.int32))
-        hop_r.append(recv.reshape(-1).copy().astype(np.int32))
+        hop_s.append(send)
+        hop_r.append(recv)
         hop_v.append(valid.reshape(-1))
         frontier = np.where(valid, nbr, 0).reshape(-1)
-        base = next_base
-        next_base += nf * f
+        live = valid.reshape(-1)
     node_ids = np.concatenate(table)
     return SampledSubgraph(node_ids=node_ids, hop_senders=hop_s,
                            hop_receivers=hop_r, hop_valid=hop_v,
                            n_seeds=n_seeds)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based forest sampling — the serving data plane
+# ---------------------------------------------------------------------------
+
+_SM_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM_M2 = np.uint64(0x94D049BB133111EB)
+_K_TREE = np.uint64(0xD1B54A32D192ED03)
+_K_HOP = np.uint64(0x8CB92BA72F3D8DD7)
+_K_LANE = np.uint64(0x2545F4914F6CDD1D)
+
+
+def _mix64(z: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer (uint64, wrapping) — the full-width cousin of
+    the DRHM multiplicative hash (core.drhm)."""
+    with np.errstate(over="ignore"):      # wrap-around is the hash
+        z = (z + _SM_GAMMA)
+        z = (z ^ (z >> np.uint64(30))) * _SM_M1
+        z = (z ^ (z >> np.uint64(27))) * _SM_M2
+        return z ^ (z >> np.uint64(31))
+
+
+def sample_forest(indptr: np.ndarray, indices: np.ndarray,
+                  seeds: np.ndarray, fanouts: Sequence[int],
+                  key: int = 0,
+                  tree_keys: np.ndarray = None) -> List[SampledSubgraph]:
+    """Many single-seed trees, one vectorized pass, counter-based draws.
+
+    The draw for (tree, hop, lane) is ``mix64(key ⊕ tree_key·C₁ ⊕ hop·C₂ ⊕
+    lane·C₃) mod deg`` — a pure function of the tree's identity, NOT of
+    which other trees share the call.  So the serving data plane can sample
+    whatever group of requests is queued in one numpy pass (amortizing the
+    per-hop python overhead that dominates single-tree sampling) while
+    offline replay with the same ``(key, tree_key)`` reproduces each tree
+    exactly, regardless of batch composition.
+
+    Semantics (degree modulus, validity propagation, padding) match
+    ``sample_subgraph`` at ``n_seeds == 1``.
+    """
+    seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+    n_trees = seeds.shape[0]
+    fanouts = tuple(int(f) for f in fanouts)
+    if tree_keys is None:
+        tree_keys = np.arange(n_trees, dtype=np.uint64)
+    tree_keys = np.asarray(tree_keys, np.uint64)
+    key_c = _mix64(np.uint64(int(key) % (1 << 64)))
+
+    frontier = seeds.reshape(n_trees, 1)        # (T, lanes)
+    live = np.ones((n_trees, 1), bool)
+    levels = [seeds.copy()]                     # stacked breadth-major
+    valid_hops = []
+    lanes = 1
+    for h, f in enumerate(fanouts):
+        deg = indptr[frontier + 1] - indptr[frontier]       # (T, lanes)
+        has_nbr = deg > 0
+        lane_idx = np.arange(lanes * f, dtype=np.uint64)
+        with np.errstate(over="ignore"):  # wrapping counter arithmetic
+            z = (key_c ^ (tree_keys[:, None] * _K_TREE)
+                 ^ (np.uint64(h + 1) * _K_HOP)
+                 ^ (lane_idx[None, :] * _K_LANE))
+        draws = _mix64(z).reshape(n_trees, lanes, f)
+        r = (draws % np.maximum(deg, 1)[:, :, None].astype(np.uint64)
+             ).astype(np.int64)                              # (T, lanes, f)
+        if indices.size:
+            gather = np.minimum(indptr[frontier][:, :, None] + r,
+                                indices.size - 1)
+            nbr = indices[gather].astype(np.int64)           # (T, lanes, f)
+        else:
+            nbr = np.zeros((n_trees, lanes, f), np.int64)
+        valid = (has_nbr & live)[:, :, None] & np.ones(
+            (n_trees, lanes, f), bool)
+        nbr = np.where(valid, nbr, -1)
+        levels.append(nbr.reshape(-1))
+        valid_hops.append(valid.reshape(n_trees, -1))
+        frontier = np.where(valid, nbr, 0).reshape(n_trees, lanes * f)
+        live = valid.reshape(n_trees, lanes * f)
+        lanes *= f
+
+    # split back into per-tree SampledSubgraphs; the hop sender/receiver
+    # arithmetic is identical for every single-seed tree (compute once)
+    tmpl = hop_slots(1, fanouts)
+    tmpl_s = [s for s, _ in tmpl]
+    tmpl_r = [r for _, r in tmpl]
+    sizes = [1] + budget(1, fanouts)            # per-tree level sizes
+    out = []
+    for t in range(n_trees):
+        node_ids = np.concatenate(
+            [levels[lv][t * s:(t + 1) * s] for lv, s in enumerate(sizes)])
+        out.append(SampledSubgraph(
+            node_ids=node_ids, hop_senders=tmpl_s, hop_receivers=tmpl_r,
+            hop_valid=[valid_hops[h][t] for h in range(len(fanouts))],
+            n_seeds=1))
+    return out

@@ -9,6 +9,10 @@ head-of-line blocking on long generations.
 The decode step function is the same ``transformer.decode_step`` the dry-run
 lowers; the scheduler is pure host logic and is unit-tested against offline
 (one-request-at-a-time) generation for bit-equality.
+
+Slot bookkeeping and admission packing come from the shared scheduler
+utilities (``repro.serve.scheduler``) — the same ``SlotPool``/``pack_fifo``
+pair the GNN dynamic batcher (DESIGN.md §10) schedules with.
 """
 from __future__ import annotations
 
@@ -19,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.scheduler import SlotPool, pack_fifo
+
 
 @dataclasses.dataclass
 class Request:
@@ -27,12 +33,6 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-
-
-@dataclasses.dataclass
-class _Slot:
-    rid: Optional[int] = None
-    pos: int = 0                # next cache index for this slot
 
 
 class ContinuousBatcher:
@@ -54,7 +54,8 @@ class ContinuousBatcher:
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.eos_id = eos_id
-        self.slots = [_Slot() for _ in range(n_slots)]
+        self.pool = SlotPool(n_slots)
+        self.pos = np.zeros(n_slots, np.int32)   # next cache index per slot
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.last_tok = np.zeros((n_slots, 1), np.int32)
@@ -63,10 +64,9 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot.rid is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
+        admitted, self.queue, _ = pack_fifo(self.queue, self.pool.free_count)
+        for req in admitted:
+            i = self.pool.acquire(req.rid)
             logits, kv = self.prefill_fn(jnp.asarray(req.prompt[None, :]))
             # write the prompt KV into slot i's cache rows
             p = req.prompt.shape[0]
@@ -80,35 +80,31 @@ class ContinuousBatcher:
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
             self.last_tok[i, 0] = tok
-            slot.rid, slot.pos = req.rid, p
+            self.pos[i] = p
             self.active[req.rid] = req
 
     def _finish(self, i: int):
-        slot = self.slots[i]
-        req = self.active.pop(slot.rid)
+        req = self.active.pop(self.pool.release(i))
         req.done = True
-        slot.rid = None
 
     def step(self) -> int:
         """Admit + one decode step for all active slots; returns #active."""
         self._admit()
-        live = [i for i, s in enumerate(self.slots) if s.rid is not None]
+        live = self.pool.live()
         if not live:
             return 0
-        positions = np.array([s.pos for s in self.slots], np.int32)
         logits, self.cache = self.decode_fn(
-            jnp.asarray(self.last_tok), self.cache, jnp.asarray(positions))
+            jnp.asarray(self.last_tok), self.cache, jnp.asarray(self.pos))
         toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        for i in live:
-            slot = self.slots[i]
-            req = self.active[slot.rid]
+        for i, rid in live:
+            req = self.active[rid]
             tok = int(toks[i])
             req.out.append(tok)
             self.last_tok[i, 0] = tok
-            slot.pos += 1
+            self.pos[i] += 1
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if len(req.out) >= req.max_new or hit_eos \
-                    or slot.pos >= self.s_max - 1:
+                    or self.pos[i] >= self.s_max - 1:
                 self._finish(i)
         return len(self.active)
 

@@ -60,3 +60,94 @@ def test_deterministic():
     b = sampler.sample_subgraph(indptr, indices, seeds, (4, 2),
                                 np.random.default_rng(3))
     assert np.array_equal(a.node_ids, b.node_ids)
+
+
+# ---------------------------------------------------------------------------
+# edge cases surfaced by serving traffic (regressions)
+# ---------------------------------------------------------------------------
+
+def test_isolated_trailing_seed_does_not_crash():
+    """A zero-degree node whose CSR slice starts at the END of `indices`
+    used to read out of bounds; it must yield an all-invalid tree."""
+    indptr = np.array([0, 2, 2, 2], np.int64)     # nodes 1, 2 isolated
+    indices = np.array([1, 2], np.int32)
+    sub = sampler.sample_subgraph(indptr, indices, np.array([2]), (4, 2),
+                                  np.random.default_rng(0))
+    assert sub.node_ids[0] == 2
+    assert not sub.hop_valid[0].any() and not sub.hop_valid[1].any()
+    assert (sub.node_ids[1:] == -1).all()
+    assert sub.node_ids.shape[0] == sampler.node_budget(1, (4, 2))
+
+
+def test_edgeless_graph():
+    sub = sampler.sample_subgraph(np.zeros(5, np.int64),
+                                  np.zeros(0, np.int32),
+                                  np.array([1, 3]), (3,),
+                                  np.random.default_rng(0))
+    assert not sub.hop_valid[0].any()
+    assert sub.node_ids.shape[0] == sampler.node_budget(2, (3,))
+
+
+def test_fanout_larger_than_degree_repeats_neighbors():
+    # node 0 has exactly one neighbor (node 1); fanout 6 must fill the
+    # fixed budget with repeats, all valid
+    indptr = np.array([0, 1, 1], np.int64)
+    indices = np.array([1], np.int32)
+    sub = sampler.sample_subgraph(indptr, indices, np.array([0]), (6,),
+                                  np.random.default_rng(0))
+    assert sub.hop_valid[0].all()
+    assert (sub.node_ids[1:] == 1).all()
+
+
+def test_invalid_lane_children_stay_invalid():
+    """Hops below a dead lane (isolated node) must not masquerade as real
+    edges, even when the dummy substitute node has neighbors."""
+    # node 0 has neighbors, node 2 is isolated (but not last — that path
+    # never crashed, it silently sampled node 0's neighborhood)
+    indptr = np.array([0, 2, 3, 3], np.int64)
+    indices = np.array([1, 2, 0], np.int32)
+    sub = sampler.sample_subgraph(indptr, indices, np.array([2]), (2, 2),
+                                  np.random.default_rng(0))
+    assert not sub.hop_valid[0].any()
+    assert not sub.hop_valid[1].any(), \
+        "children of an invalid lane leaked through as valid"
+
+
+def test_duplicate_seeds_sample_independent_trees():
+    indptr, indices, n = _graph()
+    seeds = np.array([7, 7, 7])
+    sub = sampler.sample_subgraph(indptr, indices, seeds, (5, 2),
+                                  np.random.default_rng(1))
+    assert sub.node_ids.shape[0] == sampler.node_budget(3, (5, 2))
+    assert (sub.node_ids[:3] == 7).all()
+    for h in range(2):
+        assert sub.hop_valid[h].all()
+
+
+def test_forest_matches_single_tree_semantics():
+    """sample_forest pads/validates exactly like sample_subgraph at B=1
+    (structure arrays identical; draws differ — counter vs rng stream)."""
+    indptr, indices, n = _graph()
+    trees = sampler.sample_forest(indptr, indices, np.array([3, 9]), (4, 2),
+                                  key=5)
+    single = sampler.sample_subgraph(indptr, indices, np.array([3]), (4, 2),
+                                     np.random.default_rng(0))
+    for t in trees:
+        assert t.node_ids.shape == single.node_ids.shape
+        for h in range(2):
+            assert np.array_equal(t.hop_senders[h], single.hop_senders[h])
+            assert np.array_equal(t.hop_receivers[h],
+                                  single.hop_receivers[h])
+            assert t.hop_valid[h].shape == single.hop_valid[h].shape
+
+
+def test_forest_isolated_and_edgeless():
+    indptr = np.array([0, 2, 2, 2], np.int64)
+    indices = np.array([1, 2], np.int32)
+    t_iso = sampler.sample_forest(indptr, indices, np.array([2]), (3, 2),
+                                  key=0)[0]
+    assert not t_iso.hop_valid[0].any() and not t_iso.hop_valid[1].any()
+    t_empty = sampler.sample_forest(np.zeros(4, np.int64),
+                                    np.zeros(0, np.int32),
+                                    np.array([1]), (3,), key=0)[0]
+    assert not t_empty.hop_valid[0].any()

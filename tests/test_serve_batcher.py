@@ -1,0 +1,171 @@
+"""Request plane: scheduler utilities + dynamic batcher property tests.
+
+The batcher runs on a virtual clock here — the properties (every request
+batched exactly once, deadlines respected, capacity never exceeded, no
+head-of-line blocking) are asserted over seeded random arrival traces
+without any real threads or sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.batcher import DynamicBatcher, ServeRequest
+from repro.serve.scheduler import SlotPool, pack_fifo
+
+
+# ---------------------------------------------------------------------------
+# scheduler primitives
+# ---------------------------------------------------------------------------
+
+def test_slot_pool_acquire_release():
+    pool = SlotPool(3)
+    assert pool.free_count == 3
+    assert pool.acquire("a") == 0
+    assert pool.acquire("b") == 1
+    assert pool.acquire("c") == 2
+    assert pool.acquire("d") is None          # full
+    assert pool.release(1) == "b"
+    assert pool.free_count == 1
+    assert pool.acquire("d") == 1             # lowest free slot reused
+    assert pool.live() == [(0, "a"), (1, "d"), (2, "c")]
+
+
+def test_slot_pool_double_release_raises():
+    pool = SlotPool(2)
+    pool.acquire("x")
+    pool.release(0)
+    with pytest.raises(ValueError):
+        pool.release(0)
+
+
+def test_pack_fifo_skip_ahead():
+    sizes = {"a": 10, "b": 9, "c": 3, "d": 2}
+    taken, rest, used = pack_fifo(list("abcd"), 16, size_of=sizes.get)
+    assert taken == ["a", "c", "d"] and rest == ["b"] and used == 15
+    # strict FIFO stops at the first misfit
+    taken, rest, _ = pack_fifo(list("abcd"), 16, size_of=sizes.get,
+                               skip_ahead=False)
+    assert taken == ["a"] and rest == ["b", "c", "d"]
+
+
+def test_pack_fifo_preserves_order():
+    taken, rest, used = pack_fifo(list(range(10)), 4)
+    assert taken == [0, 1, 2, 3] and rest == [4, 5, 6, 7, 8, 9]
+    assert used == 4
+
+
+# ---------------------------------------------------------------------------
+# dynamic batcher on a virtual clock
+# ---------------------------------------------------------------------------
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(rid, k=1):
+    return ServeRequest(rid=rid, seeds=np.arange(k, dtype=np.int64))
+
+
+def test_size_trigger_fires_full_bucket():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=4, max_wait=1.0, clock=clk)
+    for i in range(3):
+        b.submit(_req(i))
+    assert b.poll() is None                  # 3 < 4 and no deadline yet
+    b.submit(_req(3))
+    batch = b.poll()                         # size trigger, zero wait
+    assert [r.rid for r in batch] == [0, 1, 2, 3]
+    assert b.poll() is None
+
+
+def test_deadline_trigger_fires_partial_batch():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=8, max_wait=0.5, clock=clk)
+    b.submit(_req(0))
+    clk.t = 0.4
+    assert b.poll() is None                  # deadline not reached
+    clk.t = 0.51
+    batch = b.poll()
+    assert [r.rid for r in batch] == [0]
+
+
+def test_oversized_request_rejected():
+    b = DynamicBatcher(max_seeds=4, max_wait=0.1, clock=Clock())
+    with pytest.raises(ValueError):
+        b.submit(_req(0, k=5))
+
+
+def test_no_head_of_line_blocking():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=8, max_wait=0.5, clock=clk)
+    b.submit(_req(0, k=6))
+    b.submit(_req(1, k=5))                   # does not fit with rid 0
+    b.submit(_req(2, k=2))                   # fits alongside rid 0
+    clk.t = 0.6
+    batch = b.poll()
+    assert [r.rid for r in batch] == [0, 2]  # rid 1 skipped, not starved:
+    clk.t = 1.2
+    assert [r.rid for r in b.poll()] == [1]  # it leads the next batch
+
+
+def test_property_random_trace_exactly_once_and_deadlines():
+    """Seeded random arrival traces: every request leaves in exactly one
+    batch, no batch exceeds capacity, and no request launches later than
+    its deadline (ready time + max_wait) while the consumer polls."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        clk = Clock()
+        max_seeds, max_wait = 16, 0.05
+        b = DynamicBatcher(max_seeds, max_wait, clock=clk)
+        n = 60
+        arrivals = np.cumsum(rng.exponential(0.01, n))
+        sizes = rng.integers(1, 5, n)
+        served = {}
+        i = 0
+        t = 0.0
+        while len(served) < n:
+            # advance the clock in small ticks, submitting due arrivals
+            while i < n and arrivals[i] <= t:
+                b.submit(_req(i, int(sizes[i])))
+                i += 1
+            batch = b.poll()
+            if batch:
+                assert sum(r.n_seeds for r in batch) <= max_seeds
+                for r in batch:
+                    assert r.rid not in served, "served twice"
+                    served[r.rid] = clk()
+                    # poll cadence (2 ms) bounds the detection lag
+                    assert clk() <= r.t_ready + max_wait + 0.002 + 1e-9
+            t += 0.002
+            clk.t = t
+        assert len(served) == n
+        assert b.poll() is None and len(b) == 0
+
+
+def test_take_blocking_with_timeout_returns_none():
+    b = DynamicBatcher(max_seeds=4, max_wait=10.0)
+    assert b.take(timeout=0.01) is None
+
+
+def test_take_blocking_deadline_wakeup():
+    import time
+    b = DynamicBatcher(max_seeds=100, max_wait=0.02)
+    b.submit(_req(0))
+    t0 = time.monotonic()
+    batch = b.take(timeout=5.0)
+    dt = time.monotonic() - t0
+    assert batch and batch[0].rid == 0
+    assert dt < 1.0                          # woke on the deadline, not the timeout
+
+
+def test_flush_drains_everything():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=4, max_wait=100.0, clock=clk)
+    for i in range(11):
+        b.submit(_req(i))
+    batches = b.flush()
+    assert [len(x) for x in batches] == [4, 4, 3]
+    assert sorted(r.rid for x in batches for r in x) == list(range(11))

@@ -15,8 +15,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
-import tempfile
 import time
 
 import jax
@@ -175,17 +173,11 @@ def collect():
 
 
 def write_json(path, records):
-    """Atomic write: the trajectory artifact is never left half-written."""
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               prefix=".bench_", suffix=".json")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(records, f, indent=1)
-        os.replace(tmp, path)
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
+    """Atomic write: the trajectory artifact is never left half-written,
+    and an accumulated ``trajectory`` history survives the rewrite (one
+    shared implementation — ``benchmarks.trajectory.write_preserving``)."""
+    from benchmarks.trajectory import write_preserving
+    write_preserving(path, records)
 
 
 def check_parity(records, tol=PARITY_TOL):
@@ -209,6 +201,8 @@ def main(argv=None):
     if args.check_json:
         with open(args.check_json) as f:
             records = json.load(f)
+        if isinstance(records, dict):       # trajectory-migrated shape
+            records = records["records"]
     else:
         records = collect()
         print("# per-backend sweep (CPU wall-time; relative only)")

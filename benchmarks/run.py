@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all, CSV to stdout
   PYTHONPATH=src python -m benchmarks.run --serving  # serving engine only
+  PYTHONPATH=src python -m benchmarks.run --cluster  # scale-out tier only
 
 Modules: bloat_table (Table 1), speedup_table (Table 5 / Fig 16),
 mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
@@ -9,15 +10,21 @@ mapping_heatmap (Fig 12/13), cpi_histograms (Fig 14/15), gnn_speedup
 executors — also emitted as BENCH_backends.json for the perf trajectory),
 spgemm_sweep (sparse×sparse engine — emitted as BENCH_spgemm.json),
 serving_bench (GNN inference serving — emitted as BENCH_serving.json),
-roofline (§Roofline from dry-run).
+cluster_bench (multi-lane scale-out serving — emitted as
+BENCH_cluster.json; always a subprocess, because it must set the 8-device
+host-platform flag before jax initializes), roofline (§Roofline from
+dry-run).
 
-The three BENCH_*.json files together are the reproducible perf
-trajectory: per-backend SpMM, the SpGEMM engine, and the serving engine —
-``--backends`` / ``--spgemm`` / ``--serving`` rerun any slice alone.
+The BENCH_*.json files together are the reproducible perf trajectory —
+``--backends`` / ``--spgemm`` / ``--serving`` / ``--cluster`` rerun any
+slice alone, and ``benchmarks/trajectory.py`` appends each run's gated
+metrics to the files' bounded history.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -42,6 +49,20 @@ MODULES = [
 BACKENDS_JSON = "BENCH_backends.json"
 SPGEMM_JSON = "BENCH_spgemm.json"
 SERVING_JSON = serving_bench.DEFAULT_JSON
+CLUSTER_JSON = "BENCH_cluster.json"
+
+
+def _run_cluster_subprocess():
+    """cluster_bench needs ``--xla_force_host_platform_device_count=8`` set
+    BEFORE jax initializes — by the time run.py gets here jax is long live,
+    so the cluster slice always runs in a child process."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.cluster_bench"], env=env)
+    if proc.returncode:
+        raise RuntimeError(f"cluster_bench exited {proc.returncode}")
+
 
 # the tracked perf-trajectory emitters: (json path, collect, write)
 TRAJECTORY = [
@@ -51,6 +72,7 @@ TRAJECTORY = [
      lambda: spgemm_sweep.write_json(SPGEMM_JSON, spgemm_sweep.collect())),
     ("serving", SERVING_JSON,
      lambda: serving_bench.write_json(SERVING_JSON, serving_bench.collect())),
+    ("cluster", CLUSTER_JSON, _run_cluster_subprocess),
 ]
 
 
@@ -78,11 +100,16 @@ def main() -> None:
                          "(BENCH_backends.json)")
     ap.add_argument("--spgemm", action="store_true",
                     help="only the SpGEMM engine sweep (BENCH_spgemm.json)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="only the scale-out serving benchmark "
+                         "(BENCH_cluster.json; subprocess on an emulated "
+                         "8-device mesh)")
     args = ap.parse_args()
 
     only = [n for n, flag in (("serving", args.serving),
                               ("backends", args.backends),
-                              ("spgemm", args.spgemm)) if flag]
+                              ("spgemm", args.spgemm),
+                              ("cluster", args.cluster)) if flag]
     if only:
         sys.exit(1 if _run_trajectory(only) else 0)
 
@@ -101,8 +128,9 @@ def main() -> None:
             print(f"### {name} FAILED")
             traceback.print_exc()
     # perf trajectory, tracked from PR 1 (backends), PR 3 (spgemm),
-    # PR 4 (serving) onward — serving_bench.main() already wrote its JSON
-    failures += _run_trajectory(("backends", "spgemm"))
+    # PR 4 (serving), PR 5 (cluster) onward — serving_bench.main() already
+    # wrote its JSON
+    failures += _run_trajectory(("backends", "spgemm", "cluster"))
     if failures:
         sys.exit(1)
 

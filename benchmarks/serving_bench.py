@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -112,16 +111,22 @@ def collect(cells=DEFAULT_CELLS, **kw) -> dict:
 
 
 def write_json(path: str, data: dict):
-    tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "w") as f:
-        json.dump(data, f, indent=2, sort_keys=True)
-        f.write("\n")
-    os.replace(tmp, path)
+    # atomic + preserves the accumulated trajectory history (one shared
+    # implementation — benchmarks.trajectory.write_preserving)
+    from benchmarks.trajectory import write_preserving
+    write_preserving(path, data)
 
 
 def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
           p99_cap_ms: float = 60_000.0) -> int:
-    """CI gate: parity, zero steady-state recompiles, batched win, p99 sane."""
+    """CI gate: parity, zero steady-state recompiles, batched win, p99 sane.
+
+    The p99 cap is deliberately loose — it only catches a hung pipeline,
+    not a slow one.  The REAL latency/throughput enforcement is the
+    trajectory gate (``benchmarks/trajectory.py --compare``): it fails CI
+    when a self-normalized ratio (``speedup_vs_offline``, hit rates) drops
+    >20% below the committed baseline, which raw wall-clock caps cannot do
+    robustly on shared runners."""
     failures = 0
     for r in data["records"]:
         cell = f"{r['arch']}/{r['backend']}"

@@ -139,6 +139,8 @@ def main(argv=None):
     if args.check_json:
         with open(args.check_json) as f:
             records = json.load(f)
+        if isinstance(records, dict):       # trajectory-migrated shape
+            records = records["records"]
     else:
         records = collect()
         print("# spgemm sweep (CPU wall-time; pallas in interpret mode)")

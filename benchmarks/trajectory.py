@@ -1,0 +1,246 @@
+"""Perf-trajectory history + regression gate over the BENCH_*.json files.
+
+  # gate a fresh run against the committed baseline (fails CI on drift)
+  python -m benchmarks.trajectory --compare baseline/BENCH_serving.json \
+      BENCH_serving.json
+  # append a timestamped snapshot of a file's records to its trajectory
+  python -m benchmarks.trajectory --append BENCH_cluster.json
+
+The BENCH files are the repo's reproducible perf record (DESIGN.md §6); this
+module makes them *accumulate*: every ``--append`` (and every ``--compare``,
+which carries the baseline's history forward) pushes a timestamped snapshot
+of the gated metrics onto a bounded ``trajectory`` list inside the file, so
+the committed JSONs tell the story across PRs instead of holding only the
+latest run.
+
+The gate is deliberately machine-independent: raw timings (``us_per_call``,
+``reqs_per_s``, percentiles) are *recorded* but never gated — shared CI
+runners are noisy and slower than dev boxes.  What fails the gate is
+
+* a **ratio** metric (``speedup*``, ``scaling*``, ``*hit_rate``) dropping
+  more than ``--max-regression`` (default 20%) below the baseline —
+  self-normalized, so a slow runner cancels out;
+* any **parity drift**: a ``parity*``/``*dev*`` field exceeding its
+  tolerance, or a boolean invariant (``*match*``/``bitwise*``) flipping to
+  false;
+* a baseline record with no matching fresh record (coverage loss).
+
+No jax import — the gate runs in milliseconds and is unit-tested host-side.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+MAX_TRAJECTORY = 50            # bounded history per file
+
+# fields that identify a record (its benchmark cell) rather than measure it
+_KEY_INTS = ("n", "e", "d", "n_nodes", "n_edges", "d_in", "n_requests",
+             "n_lanes", "max_batch_seeds", "seeds_per_request", "chunk",
+             "block_rows", "n_interactions")
+
+# default parity tolerance per file basename (else _PARITY_TOL_DEFAULT)
+_PARITY_TOL = {"BENCH_serving.json": 1e-5, "BENCH_cluster.json": 1e-5}
+_PARITY_TOL_DEFAULT = 1e-4
+
+
+def records_of(data) -> List[dict]:
+    """Accept both shapes: a bare list of records (PR 1–3 sweeps) or a
+    ``{"records": [...]}`` wrapper (serving/cluster + migrated files)."""
+    if isinstance(data, list):
+        return data
+    return list(data.get("records", []))
+
+
+def _is_ratio(name: str) -> bool:
+    return ("speedup" in name or "scaling" in name or name.endswith(
+        "hit_rate"))
+
+
+def _is_parity(name: str) -> bool:
+    return "parity" in name or "dev" in name
+
+
+def _is_invariant(name: str, value) -> bool:
+    return isinstance(value, bool) and ("match" in name or "bitwise" in name
+                                        or name.startswith("ok"))
+
+
+def key_of(rec: dict) -> str:
+    """Stable identity of a benchmark cell: its string/bool/list config
+    fields plus the well-known size ints — never the measurements."""
+    parts = []
+    for k in sorted(rec):
+        v = rec[k]
+        if isinstance(v, bool):
+            continue                       # invariants are checked, not keys
+        if isinstance(v, str) or (isinstance(v, int) and k in _KEY_INTS) \
+                or (isinstance(v, list) and all(
+                    isinstance(x, (int, str)) for x in v)):
+            parts.append(f"{k}={v}")
+    return " ".join(parts) or "record"
+
+
+def gated_metrics(rec: dict) -> Dict[str, object]:
+    """Every field the gate looks at, plus raw timings for the snapshot."""
+    out = {}
+    for k, v in rec.items():
+        if _is_invariant(k, v) or (isinstance(v, (int, float))
+                                   and not isinstance(v, bool)
+                                   and (_is_ratio(k) or _is_parity(k)
+                                        or "us_per_call" in k
+                                        or "reqs_per_s" in k)):
+            out[k] = v
+    return out
+
+
+def snapshot(data, sha: Optional[str] = None) -> dict:
+    return {
+        "t": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "sha": sha if sha is not None else os.environ.get("GITHUB_SHA"),
+        "metrics": {key_of(r): gated_metrics(r) for r in records_of(data)},
+    }
+
+
+def with_snapshot(data, carry_from=None) -> dict:
+    """Rewrap ``data`` as ``{"records", "trajectory", ...}`` with a fresh
+    snapshot appended; ``carry_from`` donates its existing trajectory (the
+    committed baseline's history survives a fresh rewrite)."""
+    out = dict(data) if isinstance(data, dict) else {}
+    out["records"] = records_of(data)
+    history = []
+    for src in (carry_from, data):
+        if isinstance(src, dict) and isinstance(src.get("trajectory"), list):
+            history = src["trajectory"]
+            break
+    out["trajectory"] = (history + [snapshot(data)])[-MAX_TRAJECTORY:]
+    return out
+
+
+def compare(baseline, fresh, *, max_regression: float = 0.20,
+            parity_tol: float = _PARITY_TOL_DEFAULT,
+            label: str = "") -> List[str]:
+    """Gate ``fresh`` against ``baseline``; returns failure messages."""
+    fails: List[str] = []
+    base_by_key = {key_of(r): r for r in records_of(baseline)}
+    fresh_by_key = {key_of(r): r for r in records_of(fresh)}
+    for key, b in base_by_key.items():
+        f = fresh_by_key.get(key)
+        if f is None:
+            fails.append(f"{label}[{key}]: record missing from fresh run "
+                         "(coverage loss)")
+            continue
+        for name, bv in b.items():
+            fv = f.get(name)
+            if fv is None:
+                # a gated field vanishing is the same silent coverage loss
+                # as a vanished record; ungated fields may come and go
+                if _is_invariant(name, bv) or (
+                        isinstance(bv, (int, float))
+                        and not isinstance(bv, bool)
+                        and (_is_ratio(name) or _is_parity(name))):
+                    fails.append(f"{label}[{key}] {name}: gated field "
+                                 "missing from fresh record")
+                continue
+            if _is_invariant(name, bv):
+                if bv and not fv:
+                    fails.append(f"{label}[{key}] {name}: invariant was "
+                                 f"true, now false")
+            elif isinstance(bv, (int, float)) and not isinstance(bv, bool):
+                if _is_ratio(name) and bv > 0 \
+                        and fv < bv * (1.0 - max_regression):
+                    fails.append(
+                        f"{label}[{key}] {name}: {fv:.3g} < "
+                        f"{(1 - max_regression):.0%} of baseline {bv:.3g}")
+                elif _is_parity(name) and fv > max(parity_tol, 2.0 * bv):
+                    fails.append(f"{label}[{key}] {name}: {fv:.3g} exceeds "
+                                 f"tolerance {parity_tol:.0e} "
+                                 f"(baseline {bv:.3g})")
+    return fails
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _write(path: str, data: dict):
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def write_preserving(path: str, data):
+    """Atomic write that preserves the target's accumulated ``trajectory``
+    history across a fresh rewrite — THE write path for every BENCH_*.json
+    emitter (backend_sweep / serving_bench / cluster_bench all route their
+    rewrites through here so history handling has one home).  ``data`` may
+    be a bare record list or a ``{"records": ...}`` dict."""
+    try:
+        old = _load(path)
+    except (OSError, ValueError):
+        old = None
+    if isinstance(old, dict) and isinstance(old.get("trajectory"), list):
+        if isinstance(data, list):
+            data = {"records": data}
+        data = dict(data, trajectory=old["trajectory"])
+    _write(path, data)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--append", nargs="+", default=None, metavar="FILE",
+                    help="append a timestamped snapshot to each file's "
+                         "trajectory (migrates list-shaped files)")
+    ap.add_argument("--compare", nargs=2, default=None,
+                    metavar=("BASELINE", "FRESH"),
+                    help="gate FRESH against BASELINE; also appends the "
+                         "fresh snapshot to FRESH, carrying BASELINE's "
+                         "history forward")
+    ap.add_argument("--max-regression", type=float, default=0.20)
+    ap.add_argument("--parity-tol", type=float, default=None,
+                    help="override the per-file parity tolerance")
+    args = ap.parse_args(argv)
+
+    if args.append:
+        for path in args.append:
+            data = _load(path)
+            _write(path, with_snapshot(data))
+            print(f"trajectory: appended snapshot to {path} "
+                  f"({len(records_of(data))} records)")
+        return 0
+
+    if args.compare:
+        base_path, fresh_path = args.compare
+        baseline = _load(base_path)
+        fresh = _load(fresh_path)
+        tol = args.parity_tol
+        if tol is None:
+            tol = _PARITY_TOL.get(os.path.basename(fresh_path),
+                                  _PARITY_TOL_DEFAULT)
+        fails = compare(baseline, fresh,
+                        max_regression=args.max_regression, parity_tol=tol,
+                        label=os.path.basename(fresh_path))
+        _write(fresh_path, with_snapshot(fresh, carry_from=baseline))
+        if fails:
+            for m in fails:
+                print(f"FAIL {m}")
+            return 1
+        n = len(records_of(fresh))
+        print(f"trajectory gate OK: {fresh_path} — {n} records within "
+              f"{args.max_regression:.0%} of baseline, parity ≤ {tol:.0e}; "
+              "history carried forward")
+        return 0
+
+    ap.error("one of --append / --compare is required")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -192,6 +192,42 @@ def make_allgather_spmm_dims(mesh, rows_per_shard: int, data_axis="data",
     )
 
 
+def make_halo_gather(mesh, n_ghost_slot: int, data_axis="data"):
+    """Halo exchange for sharded serving (DESIGN.md §11): each lane holds a
+    DRHM-permuted row shard of the resident feature table and one sampled
+    subgraph's node ids; boundary rows (owned by other lanes) arrive through
+    the same stage-0 operand fetch the distributed SpMM uses (all-gather
+    along the lane axis), then each lane gathers exactly its subgraph's
+    rows.  The gather is a pure row copy, so sharded residency is *bitwise*
+    identical to replicated residency — the cluster parity contract.
+
+    Note the memory shape: sharding bounds what each lane stores AT REST
+    (R = n_pad/L rows); the all-gather still materializes the full table
+    *transiently* during the exchange, so peak working memory matches
+    replicated mode.  A selective exchange (ship only each lane's
+    requested boundary rows, e.g. ragged all-to-all) is the follow-up that
+    makes peak memory O(R + batch); the call signature here is already
+    shaped for that swap.
+
+    Returned fn: ``(x_perm, perm, node_ids) -> x_batch``
+    x_perm: (n_pad, D) P(lane) — permuted, sharded feature table;
+    perm: (n_rows,) replicated row→slot map; node_ids: (L, n) P(lane),
+    ``-1`` ⇒ the ghost slot ``perm[n_ghost_slot]``; x_batch: (L, n, D) P(lane).
+    """
+
+    def local_fn(x_loc, perm, node_ids):
+        x_full = jax.lax.all_gather(x_loc, data_axis, axis=0, tiled=True)
+        ridx = jnp.where(node_ids[0] >= 0, node_ids[0],
+                         n_ghost_slot).astype(jnp.int32)
+        return jnp.take(x_full, jnp.take(perm, ridx), axis=0)[None]
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(data_axis), P(), P(data_axis)),
+        out_specs=P(data_axis),
+    )
+
+
 def make_owner_accumulate(mesh, rows_per_shard: int, data_axis="data"):
     """Accumulate-only distributed stage: per-edge messages are already
     formed (vector-valued multiply stage ran upstream) and grouped by the

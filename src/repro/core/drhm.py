@@ -189,3 +189,47 @@ def plan_row_sharding(n_ids: int, n_shards: int, gamma: int) -> DRHMShardPlan:
     return DRHMShardPlan(gamma=g, n_ids=n_ids, n_pad=n_pad,
                          n_shards=n_shards, perm=perm,
                          inv_perm=invert_permutation(perm))
+
+
+# ---------------------------------------------------------------------------
+# Request routing: DRHM one level up (traffic instead of partial products)
+# ---------------------------------------------------------------------------
+
+_SM_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def mix64(z) -> np.ndarray:
+    """splitmix64 finalizer (host numpy, wrapping) — the full-width cousin of
+    the multiplicative DRHM hash; same stream the serving sampler draws from
+    (``sparse.sampler._mix64``).  Used to pre-condition request TAGs before
+    the γ-seeded bin permutation, so adversarial seed *values* cannot choose
+    their bin by construction — only by searching the (reseedable) map."""
+    z = np.asarray(z, np.uint64)
+    with np.errstate(over="ignore"):
+        z = z + _SM_GAMMA
+        z = (z ^ (z >> np.uint64(30))) * _SM_M1
+        z = (z ^ (z >> np.uint64(27))) * _SM_M2
+        return z ^ (z >> np.uint64(31))
+
+
+def route_gamma(seed: int, epoch: int) -> int:
+    """The reseed sequence for request routing: γ_k = odd(mix64(seed, k)).
+
+    Odd ⇒ coprime to any power-of-two bin count ⇒ every epoch's bin→lane map
+    stays an exact-balance bijection (the property the router tests pin)."""
+    g = int(mix64(np.uint64(int(seed) % (1 << 32)) * np.uint64(0x51ED2701)
+                  ^ np.uint64(int(epoch))))
+    return (g & 0xFFFFFFFF) | 1
+
+
+def plan_request_routing(n_bins: int, n_lanes: int, seed: int = 0,
+                         epoch: int = 0) -> DRHMShardPlan:
+    """Bin→lane ownership for request routing: the same DRHM bijective
+    permutation used for row sharding, applied to a padded power-of-two bin
+    space.  Each lane owns exactly ``n_bins / n_lanes`` bins (exact balance
+    over bins); *reseeding* (a new epoch ⇒ new γ) re-permutes which bins a
+    lane owns, so a seed stream that piles onto one lane under γ_k spreads
+    under γ_{k+1} — the paper's dynamic reseeding applied to traffic."""
+    return plan_row_sharding(n_bins, n_lanes, route_gamma(seed, epoch))

@@ -1,13 +1,21 @@
-"""GNN inference serving driver (DESIGN.md §10).
+"""GNN inference serving driver (DESIGN.md §10–11).
 
   PYTHONPATH=src python -m repro.launch.gnn_serve --arch gcn --requests 100 \
       --backend pallas --max-batch 16 --fanouts 5,3
 
-Stands up a ``GNNServer`` over a synthetic power-law resident graph, fires
-a seeded open-loop request trace at it, drains, and reports throughput,
-latency percentiles, bucket hit-rates, and the recompile counter — then
-replays every request offline (one at a time, same sampled trees) and
-checks parity.
+  # scale-out: 8 replica lanes with DRHM request routing (DESIGN.md §11)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.gnn_serve --arch gcn --replicas 8
+
+  # sharded residency: lanes own DRHM row shards, halo-exchange boundaries
+  ... --replicas 8 --shard
+
+Stands up a ``GNNServer`` (or, with ``--replicas``/``--shard``, a
+``ClusterServer``) over a synthetic power-law resident graph, fires a
+seeded open-loop request trace at it, drains, and reports throughput,
+latency percentiles, per-lane utilization, reseeds, and the recompile
+counter — then replays every request offline (one at a time, same sampled
+trees) and checks parity.
 """
 from __future__ import annotations
 
@@ -18,7 +26,8 @@ import jax
 import numpy as np
 
 from repro.data import synthetic as syn
-from repro.serve import FeatureStore, GNNServer, offline_inference
+from repro.serve import (ClusterServer, FeatureStore, GNNServer,
+                         offline_inference)
 from repro.sparse.graph import coo_to_csr
 from repro.sparse.plan import ALL_BACKENDS
 
@@ -54,6 +63,50 @@ def build_world(arch: str, n_nodes: int, n_edges: int, d_in: int,
     return cfg, params, indptr, indices, FeatureStore.build(n_nodes, x=x)
 
 
+def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
+    """The scale-out path: N replica lanes, DRHM-routed (DESIGN.md §11)."""
+    rng = np.random.default_rng(args.seed + 2)
+    traces = [rng.integers(0, args.nodes, max(args.seeds_per_request, 1))
+              for _ in range(args.requests)]
+    mode = "sharded" if args.shard else "replicated"
+    server = ClusterServer(args.arch, cfg, params, indptr, indices, store,
+                           n_lanes=args.replicas, mode=mode,
+                           placement=args.placement, fanouts=fanouts,
+                           backend=args.backend,
+                           max_batch_seeds=args.max_batch,
+                           max_wait_ms=args.max_wait_ms,
+                           n_workers=args.workers, seed=args.seed)
+    with server:
+        server.warmup()
+        warm_builds = server.steps.builds
+        server.reset_stats()
+        t0 = time.perf_counter()
+        reqs = server.submit_many(traces)
+        server.drain()
+        dt = time.perf_counter() - t0
+        st = server.stats()
+        ls = server.lane_stats()
+        print(f"[gnn-serve] {args.arch}/{args.backend} {mode} "
+              f"x{args.replicas} ({args.placement}): "
+              f"{args.requests} requests in {dt:.2f}s "
+              f"({args.requests / dt:.1f} req/s)  "
+              f"p50={st['p50_ms']:.1f}ms p99={st['p99_ms']:.1f}ms  "
+              f"rounds={st['n_rounds']} reseeds={st['reseeds']} "
+              f"recompiles(post-warmup)={server.steps.builds - warm_builds}")
+        print(f"[gnn-serve] per-lane served={ls['served']} "
+              f"spread={ls['served_spread']:.2f}x mean")
+        if not args.skip_offline:
+            sub = reqs[:min(32, len(reqs))]
+            ref = np.concatenate([server.offline_replay(r) for r in sub])
+            got = np.concatenate([r.result for r in sub])
+            dev = float(np.abs(got - ref).max())
+            print(f"[gnn-serve] offline replay parity max|Δ| {dev:.2e} "
+                  f"({'OK' if dev <= 1e-5 else 'FAIL'})")
+            if dev > 1e-5:
+                return 1
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gcn",
@@ -70,11 +123,27 @@ def main():
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-offline", action="store_true")
+    # scale-out tier (DESIGN.md §11)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving lanes; >1 stands up the DRHM-routed "
+                         "cluster tier (conv archs only)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the resident feature table over the lanes "
+                         "(DRHM row shards + halo exchange); needs "
+                         "replicas devices")
+    ap.add_argument("--placement", default="stacked",
+                    choices=["stacked", "mesh"],
+                    help="lane compute placement: one vmapped dispatch "
+                         "(stacked) or shard_map over a lane mesh")
+    ap.add_argument("--seeds-per-request", type=int, default=1)
     args = ap.parse_args()
 
     fanouts = tuple(int(f) for f in args.fanouts.split(","))
     cfg, params, indptr, indices, store = build_world(
         args.arch, args.nodes, args.edges, args.d_in, args.seed)
+    if args.replicas > 1 or args.shard:
+        return run_cluster(args, fanouts, cfg, params, indptr, indices,
+                           store)
     rng = np.random.default_rng(args.seed + 2)
     seeds = rng.integers(0, args.nodes, args.requests)
 

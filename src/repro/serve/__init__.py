@@ -19,15 +19,19 @@ against offline one-request-at-a-time inference on the same sampled trees.
 from repro.serve.batcher import DynamicBatcher, ServeRequest
 from repro.serve.buckets import (BucketStructure, bucket_for,
                                  build_bucket_structure, stack_trees)
-from repro.serve.compute import (FeatureStore, StepCache, build_infer_step)
-from repro.serve.engine import (GNNServer, offline_inference,
+from repro.serve.cluster import (ClusterServer, DRHMRouter,
+                                 utilization_spread)
+from repro.serve.compute import (FeatureStore, StepCache, build_infer_step,
+                                 build_lane_infer_step)
+from repro.serve.engine import (GNNServer, SamplerPool, offline_inference,
                                 offline_replay)
-from repro.serve.scheduler import SlotPool, pack_fifo
+from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
 
 __all__ = [
     "DynamicBatcher", "ServeRequest",
     "BucketStructure", "bucket_for", "build_bucket_structure", "stack_trees",
-    "FeatureStore", "StepCache", "build_infer_step",
-    "GNNServer", "offline_inference", "offline_replay",
-    "SlotPool", "pack_fifo",
+    "ClusterServer", "DRHMRouter", "utilization_spread",
+    "FeatureStore", "StepCache", "build_infer_step", "build_lane_infer_step",
+    "GNNServer", "SamplerPool", "offline_inference", "offline_replay",
+    "LaneSlotPools", "SlotPool", "pack_fifo",
 ]

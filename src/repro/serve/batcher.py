@@ -32,6 +32,7 @@ class ServeRequest:
 
     rid: int
     seeds: np.ndarray                 # (k,) int64 seed node ids
+    lane: Optional[int] = None        # serving lane (cluster tier routing)
     t_submit: float = 0.0             # clock time at submit
     t_ready: float = 0.0              # sampling finished, joined the queue
     t_done: float = 0.0               # result materialized
@@ -87,6 +88,7 @@ class DynamicBatcher:
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._pending: List[ServeRequest] = []
+        self._pending_seeds = 0           # running sum — O(1) ripeness check
         self.n_submitted = 0
         self.n_batches = 0
 
@@ -103,6 +105,7 @@ class DynamicBatcher:
         req.t_ready = self.clock()
         with self._cond:
             self._pending.append(req)
+            self._pending_seeds += req.n_seeds
             self.n_submitted += 1
             self._cond.notify()
 
@@ -110,13 +113,14 @@ class DynamicBatcher:
     def _ripe(self, now: float) -> bool:
         if not self._pending:
             return False
-        if sum(r.n_seeds for r in self._pending) >= self.max_seeds:
+        if self._pending_seeds >= self.max_seeds:
             return True                                   # size trigger
         return now - self._pending[0].t_ready >= self.max_wait  # deadline
 
     def _take(self) -> List[ServeRequest]:
-        taken, self._pending, _ = pack_fifo(
+        taken, self._pending, used = pack_fifo(
             self._pending, self.max_seeds, size_of=lambda r: r.n_seeds)
+        self._pending_seeds -= used
         self.n_batches += 1
         return taken
 

@@ -126,19 +126,24 @@ def stack_trees(trees: List, n_seeds: int,
     tree_levels = [1] + sampler.budget(1, fanouts)      # per-tree level sizes
     node_ids = np.full(sampler.node_budget(n_seeds, fanouts), -1, np.int64)
     hop_valid = np.zeros(sum(sampler.budget(n_seeds, fanouts)), bool)
+    # vectorized splice: a bucket level block viewed as (n_seeds, size) rows
+    # IS tree-major, so stacking the trees' tables once lets every level
+    # land in one 2-D assignment (the engine stacks a round's worth of
+    # batches per dispatch — per-tree python loops were the hot spot)
+    all_nodes = np.stack([t.node_ids for t in trees])   # (k, tree_nodes)
     node_off = 0                                        # bucket level offset
     tree_off = 0                                        # tree level offset
-    for lv, size in enumerate(tree_levels):
-        for t, tree in enumerate(trees):
-            dst = node_off + t * size
-            node_ids[dst:dst + size] = tree.node_ids[tree_off:tree_off + size]
+    for size in tree_levels:
+        block = node_ids[node_off:node_off + size * n_seeds]
+        block.reshape(n_seeds, size)[:k] = \
+            all_nodes[:, tree_off:tree_off + size]
         node_off += size * n_seeds
         tree_off += size
     edge_off = 0
     for h in range(len(fanouts)):
         size = tree_levels[h + 1]                       # edges per tree, hop h
-        for t, tree in enumerate(trees):
-            dst = edge_off + t * size
-            hop_valid[dst:dst + size] = tree.hop_valid[h]
+        block = hop_valid[edge_off:edge_off + size * n_seeds]
+        block.reshape(n_seeds, size)[:k] = \
+            np.stack([t.hop_valid[h] for t in trees])
         edge_off += size * n_seeds
     return node_ids, hop_valid

@@ -1,0 +1,625 @@
+"""Scale-out GNN serving: DRHM-routed multi-replica lanes (DESIGN.md §11).
+
+The paper's third headline mechanism — load balancing via **dynamic
+reseeding hash-based mapping** — runs below the kernel line everywhere else
+in this repo (``core.drhm`` maps partial products onto NeuraMem units, the
+SpGEMM HashPad reseeds γ per tile).  Here the same trick is applied one
+level up: the *requests* are the TAGs, the *serving lanes* are the bins.
+
+``ClusterServer`` runs ``n_lanes`` replica lanes over a jax device mesh
+(emulated 8-device in CI via ``--xla_force_host_platform_device_count``):
+
+* **routing** — a ``DRHMRouter`` maps each request's seed TAG through a
+  splitmix-conditioned bin, then through the γ-seeded DRHM bijective bin→
+  lane permutation (``drhm.plan_request_routing``).  Every lane owns exactly
+  ``n_bins/n_lanes`` bins.  When per-lane queue-depth skew exceeds a
+  threshold the router **reseeds γ** and re-permutes the bins — the paper's
+  dynamic reseeding applied to traffic instead of partial products.
+  In-flight requests drain on the old map (lane is pinned at submit).
+* **replicated mode** — every lane holds the full resident graph; per-lane
+  dynamic batchers feed **rounds**: one batch per lane, lane-stacked into a
+  single dispatch of a vmapped (or mesh-sharded) bucket step
+  (``compute.build_lane_infer_step``).  Per-dispatch overhead is paid once
+  per round instead of once per lane — the aggregate-throughput win.
+* **sharded mode** — feature *residency* is DRHM-row-sharded: each lane
+  stores exactly ``n_pad/n_lanes`` rows at rest
+  (``sparse.plan.plan_feature_sharding``), and sampled-subgraph boundary
+  rows arrive through a halo exchange
+  (``core.distributed.make_halo_gather`` — the distributed executor's
+  stage-0 operand fetch).  At CI scale the halo is the full frontier (an
+  all-gather materializes the table transiently per round — see the
+  factory's docstring); shipping only the requested boundary rows is the
+  next optimization seam on this path.  The gather is an exact row copy,
+  so sharded output is **bitwise** identical to replicated output.
+
+Correctness anchor: every request's result must match the single-device
+offline replay (same deterministic trees, bucket-1 step) to ≤1e-5.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import drhm
+from repro.serve.batcher import DynamicBatcher, ServeRequest
+from repro.serve.buckets import (all_buckets, bucket_for,
+                                 build_bucket_structure, stack_trees)
+from repro.serve.compute import (CONV_ARCHS, FeatureStore, StepCache,
+                                 _arch_key, build_fetch_step,
+                                 build_infer_step, build_lane_infer_step)
+from repro.serve.engine import SamplerPool, _needs_loops
+from repro.serve.scheduler import LaneSlotPools
+
+MODES = ("replicated", "sharded")
+PLACEMENTS = ("stacked", "mesh")
+
+
+# ---------------------------------------------------------------------------
+# Router — DRHM with dynamic reseeding, one level up
+# ---------------------------------------------------------------------------
+
+class DRHMRouter:
+    """Seed-TAG → lane mapping with dynamic γ reseeding.
+
+    ``lane_of(seeds) = owner(perm_γ[mix64(seed₀) mod n_bins])`` where
+    ``perm_γ`` is the DRHM bijective permutation of the bin space — so for
+    every epoch the bin→lane map is an exact-balance bijection (each lane
+    owns exactly ``n_bins/n_lanes`` bins; the property tests pin this).
+
+    ``maybe_reseed(depths)`` implements the paper's trigger at traffic
+    level: when the max per-lane queue depth exceeds ``skew_threshold`` ×
+    the mean (and there is enough traffic for the signal to be meaningful),
+    draw a new γ and re-permute.  A seed stream adversarially concentrated
+    onto one lane under γ_k occupies many *bins*; the fresh permutation
+    scatters those bins uniformly across lanes — rebalance without moving
+    any resident state (lanes are replicas; only future routing changes).
+
+    Not thread-safe by itself; the cluster serializes access.
+    """
+
+    def __init__(self, n_lanes: int, n_bins: int = 1024, seed: int = 0,
+                 skew_threshold: float = 1.5, min_mean_depth: float = 1.0,
+                 noise_slack: float = 4.0):
+        if n_lanes <= 0:
+            raise ValueError(f"n_lanes must be positive, got {n_lanes}")
+        self.n_lanes = int(n_lanes)
+        self.seed = int(seed)
+        self.skew_threshold = float(skew_threshold)
+        self.min_mean_depth = float(min_mean_depth)
+        self.noise_slack = float(noise_slack)
+        self.epoch = 0
+        self.reseeds = 0
+        self._plan = drhm.plan_request_routing(max(int(n_bins), n_lanes),
+                                               n_lanes, self.seed, 0)
+        self.n_bins = self._plan.n_pad        # padded to a lane multiple
+        # per-epoch routed counts — the utilization-spread record the bench
+        # reports before/after a reseed
+        self.epoch_counts: List[np.ndarray] = [np.zeros(n_lanes, np.int64)]
+        # queue depths at the last reseed: old-map backlog that a new γ
+        # cannot fix (those requests drain on the old map) — subtracted
+        # from the skew signal so one hot burst triggers ONE reseed, not
+        # one per check interval while the hot lane drains
+        self._depths_at_reseed = np.zeros(n_lanes, np.float64)
+
+    @property
+    def gamma(self) -> int:
+        return self._plan.gamma
+
+    def _lanes_for(self, tags: np.ndarray) -> np.ndarray:
+        """THE bin→lane math (one home, scalar and bulk paths share it):
+        splitmix-conditioned TAG → bin → γ-permuted owner lane."""
+        bins = (drhm.mix64(np.asarray(tags, np.uint64))
+                % np.uint64(self.n_bins)).astype(np.int64)
+        return self._plan.perm[bins] // self._plan.rows_per_shard
+
+    def bin_of(self, seeds) -> int:
+        tag = np.uint64(int(np.atleast_1d(seeds)[0]))
+        return int(drhm.mix64(tag) % np.uint64(self.n_bins))
+
+    def lane_of(self, seeds) -> int:
+        return int(self._lanes_for([np.atleast_1d(seeds)[0]])[0])
+
+    def route(self, seeds) -> int:
+        """``lane_of`` + utilization accounting (the serving entry point)."""
+        lane = self.lane_of(seeds)
+        self.epoch_counts[-1][lane] += 1
+        return lane
+
+    def route_many(self, first_seeds: np.ndarray) -> np.ndarray:
+        """Vectorized ``route`` over one TAG per request (bulk ingest)."""
+        lanes = self._lanes_for(first_seeds)
+        np.add.at(self.epoch_counts[-1], lanes, 1)
+        return lanes
+
+    def lane_map(self) -> np.ndarray:
+        """(n_bins,) bin → lane under the current γ (for the bijectivity
+        property: every lane appears exactly ``n_bins/n_lanes`` times)."""
+        return (self._plan.perm // self._plan.rows_per_shard).astype(np.int64)
+
+    def reseed(self):
+        self.epoch += 1
+        self.reseeds += 1
+        self._plan = drhm.plan_request_routing(self.n_bins, self.n_lanes,
+                                               self.seed, self.epoch)
+        self.epoch_counts.append(np.zeros(self.n_lanes, np.int64))
+
+    def maybe_reseed(self, queue_depths: Sequence[float]) -> bool:
+        # judge only depth accrued SINCE the last reseed: the old map's
+        # backlog is pinned to its lanes and no new γ can rebalance it
+        # (the subtraction over-counts as old requests finish — that only
+        # makes the trigger more conservative, never spurious)
+        d = np.maximum(np.asarray(queue_depths, np.float64)
+                       - self._depths_at_reseed, 0.0)
+        mean = float(d.mean())
+        if mean < self.min_mean_depth:
+            return False                  # too little traffic to judge skew
+        # skew must clear BOTH the ratio threshold and a Poisson-noise slack
+        # (~√mean): uniform traffic at low depth routinely shows max/mean
+        # near 2 by pure counting noise — reseeding on that would churn the
+        # map without improving balance
+        skewed = (float(d.max()) > self.skew_threshold * mean
+                  and float(d.max()) - mean > self.noise_slack * mean ** 0.5)
+        if skewed:
+            self._depths_at_reseed = np.asarray(queue_depths, np.float64)
+            self.reseed()
+            return True
+        return False
+
+    def info(self) -> dict:
+        return {"epoch": self.epoch, "reseeds": self.reseeds,
+                "gamma": self.gamma, "n_bins": self.n_bins,
+                "routed_per_epoch": [c.tolist() for c in self.epoch_counts]}
+
+
+def utilization_spread(counts: Sequence[float]) -> float:
+    """max/mean per-lane load — 1.0 is perfect balance (the paper's hot-spot
+    metric, ``drhm.imbalance``, on host counters)."""
+    c = np.asarray(counts, np.float64)
+    return float(c.max() / max(c.mean(), 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# The cluster server
+# ---------------------------------------------------------------------------
+
+class ClusterServer:
+    """N-lane scale-out serving tier over one resident graph."""
+
+    def __init__(self, arch_id: str, cfg, params, indptr: np.ndarray,
+                 indices: np.ndarray, store: FeatureStore, *,
+                 n_lanes: int = 4, mode: str = "replicated",
+                 placement: str = "stacked",
+                 fanouts: Sequence[int] = (5, 3), backend: str = "dense",
+                 max_batch_seeds: int = 16, max_wait_ms: float = 5.0,
+                 n_workers: int = 2, seed: int = 0, inflight: int = 2,
+                 step_cache_size: int = 16, router_bins: int = 1024,
+                 skew_threshold: float = 1.5, reseed_check_every: int = 32,
+                 shard_gamma: int = 0x9E3779B1, sampler_group: int = 256,
+                 clock=time.monotonic):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"have {PLACEMENTS}")
+        if _arch_key(arch_id) not in CONV_ARCHS:
+            raise ValueError(f"cluster serving covers {CONV_ARCHS}; "
+                             f"{arch_id!r} is single-device only")
+        if store.x is None:
+            raise ValueError("cluster serving needs FeatureStore.x")
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.params = params
+        self.indptr = np.asarray(indptr)
+        self.indices = np.asarray(indices)
+        self.store = store
+        self.n_lanes = int(n_lanes)
+        self.mode = mode
+        self.placement = placement
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.backend = backend
+        self.max_batch_seeds = int(max_batch_seeds)
+        self.seed = seed
+        self.clock = clock
+        self.inflight_depth = max(int(inflight), 1)
+        self.reseed_check_every = max(int(reseed_check_every), 1)
+
+        import jax
+        self.mesh = None
+        if mode == "sharded" or placement == "mesh":
+            if jax.device_count() < self.n_lanes:
+                raise ValueError(
+                    f"mode={mode!r}/placement={placement!r} needs "
+                    f"{self.n_lanes} devices, have {jax.device_count()} — "
+                    "run under XLA_FLAGS=--xla_force_host_platform_"
+                    f"device_count={self.n_lanes} (or placement='stacked' "
+                    "replicated, which is device-count-agnostic)")
+            self.mesh = jax.make_mesh((self.n_lanes,), ("lane",))
+
+        # routing plane
+        self.router = DRHMRouter(self.n_lanes, n_bins=router_bins, seed=seed,
+                                 skew_threshold=skew_threshold)
+        self._router_lock = threading.Lock()
+        self._since_check = 0
+        self._lane_submitted = np.zeros(self.n_lanes, np.int64)
+        self._lane_finished = np.zeros(self.n_lanes, np.int64)
+
+        # request plane: one dynamic batcher per lane + in-flight slot pools
+        self.batchers = [DynamicBatcher(self.max_batch_seeds,
+                                        max_wait_ms / 1e3, clock=clock)
+                         for _ in range(self.n_lanes)]
+        self.pools = LaneSlotPools(self.n_lanes, self.inflight_depth)
+
+        # compute plane
+        self.steps = StepCache(self._build_step, maxsize=step_cache_size)
+        self._offline_steps = StepCache(self._build_offline_step, maxsize=4)
+        self._structs: Dict[int, object] = {}
+        if mode == "sharded":
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            from repro.core.distributed import make_halo_gather
+            from repro.sparse.plan import plan_feature_sharding
+            n_rows = self.store.n_nodes + 1           # ghost row included
+            self.shard_plan = plan_feature_sharding(n_rows, self.n_lanes,
+                                                    shard_gamma)
+            x_perm = self.shard_plan.permute_table(np.asarray(self.store.x))
+            self._x_perm = jax.device_put(
+                jax.numpy.asarray(x_perm),
+                NamedSharding(self.mesh, P("lane")))
+            self._perm_dev = jax.numpy.asarray(
+                self.shard_plan.perm.astype(np.int32))
+            self._halo = jax.jit(make_halo_gather(
+                self.mesh, n_ghost_slot=self.store.n_nodes,
+                data_axis="lane"))
+        else:
+            self.shard_plan = None
+            self._fetch_step = build_fetch_step(self.store)
+
+        self._rid_lock = threading.Lock()
+        self._next_rid = 0
+        self.requests: Dict[int, ServeRequest] = {}
+
+        self._stats_lock = threading.Lock()
+        self.bucket_counts: Dict[int, int] = collections.Counter()
+        self.bucket_hits = 0
+        self.n_served = 0
+        self.n_rounds = 0
+        self._lane_served = np.zeros(self.n_lanes, np.int64)
+        self._lane_batches = np.zeros(self.n_lanes, np.int64)
+        self.latencies: "collections.deque[float]" = collections.deque(
+            maxlen=8192)
+
+        # data plane: the shared sampler pool; compute plane: engine thread
+        # larger drain groups than the single-lane default: a cluster burst
+        # queues hundreds of requests, and the vectorized forest pass's
+        # fixed cost amortizes across everything a worker can grab
+        self._sampler = SamplerPool(self.indptr, self.indices, self.fanouts,
+                                    seed, on_ready=self._on_sampled,
+                                    on_error=self._fail_requests,
+                                    n_workers=n_workers,
+                                    group_cap=sampler_group)
+        self._closing = False
+        self._stop = threading.Event()
+        self._work = threading.Event()
+        self._inflight: "collections.deque" = collections.deque()
+        self._engine = threading.Thread(target=self._engine_loop, daemon=True,
+                                        name="gnn-cluster-engine")
+        self._engine.start()
+
+    # -- request plane ------------------------------------------------------
+    def submit(self, seeds) -> ServeRequest:
+        if self._closing:
+            raise RuntimeError("cluster is closed; no lane will serve this")
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        n_graph = self.indptr.shape[0] - 1
+        if seeds.size == 0 or seeds.size > self.max_batch_seeds:
+            raise ValueError(
+                f"request carries {seeds.size} seeds; must be in "
+                f"[1, {self.max_batch_seeds}] (the bucket cap)")
+        if (seeds < 0).any() or (seeds >= n_graph).any():
+            raise ValueError(
+                f"seed ids {seeds[(seeds < 0) | (seeds >= n_graph)]} out of "
+                f"range for the resident graph ({n_graph} nodes)")
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
+            self.requests[rid] = req
+        with self._router_lock:
+            # lane pinned at submit — a later reseed never remaps a request
+            # already in flight (it drains on the old map)
+            req.lane = self.router.route(seeds)
+            self._lane_submitted[req.lane] += 1
+            self._since_check += 1
+            if self._since_check >= self.reseed_check_every:
+                self._since_check = 0
+                self.router.maybe_reseed(self.queue_depths())
+        self._sampler.submit(req)
+        return req
+
+    def submit_many(self, seed_lists: Sequence) -> List[ServeRequest]:
+        """Bulk ingest: validate, rid-assign, and DRHM-route a whole burst
+        in vectorized passes, then hand the block to the sampler pool as one
+        group.  Per-request ``submit()`` costs ~80µs under load (locks,
+        scalar hashing, queue round-trips) — an open-loop load generator
+        firing thousands of requests would be *arrival-bound* on that path
+        and measure the generator, not the lanes.  Routing semantics are
+        identical: the reseed check still runs every ``reseed_check_every``
+        requests (the burst is routed in chunks), and each request's lane is
+        pinned when its chunk is routed."""
+        if self._closing:
+            raise RuntimeError("cluster is closed; no lane will serve this")
+        seed_arrs = [np.atleast_1d(np.asarray(s, np.int64))
+                     for s in seed_lists]
+        if not seed_arrs:
+            return []
+        n_graph = self.indptr.shape[0] - 1
+        sizes = np.array([a.size for a in seed_arrs])
+        if (sizes == 0).any() or (sizes > self.max_batch_seeds).any():
+            raise ValueError(f"every request must carry 1..."
+                             f"{self.max_batch_seeds} seeds; "
+                             f"got sizes {sizes[(sizes == 0) | (sizes > self.max_batch_seeds)]}")
+        flat = np.concatenate(seed_arrs)
+        if (flat < 0).any() or (flat >= n_graph).any():
+            raise ValueError(f"seed ids out of range for the resident graph "
+                             f"({n_graph} nodes)")
+        now = self.clock()
+        with self._rid_lock:
+            rid0 = self._next_rid
+            self._next_rid += len(seed_arrs)
+            reqs = [ServeRequest(rid=rid0 + i, seeds=a, t_submit=now)
+                    for i, a in enumerate(seed_arrs)]
+            for req in reqs:
+                self.requests[req.rid] = req
+        first = np.array([a[0] for a in seed_arrs], np.uint64)
+        with self._router_lock:
+            i = 0
+            while i < len(reqs):
+                # chunked so reseed checks fire at the same cadence as the
+                # scalar path (lane pinned per chunk, on the current map)
+                take = min(self.reseed_check_every - self._since_check,
+                           len(reqs) - i)
+                lanes = self.router.route_many(first[i:i + take])
+                for j, lane in enumerate(lanes):
+                    reqs[i + j].lane = int(lane)
+                np.add.at(self._lane_submitted, lanes, 1)
+                self._since_check += take
+                i += take
+                if self._since_check >= self.reseed_check_every:
+                    self._since_check = 0
+                    self.router.maybe_reseed(self.queue_depths())
+        self._sampler.submit_block(reqs)
+        return reqs
+
+    def queue_depths(self) -> np.ndarray:
+        """Per-lane submitted-but-unfinished request counts — the router's
+        skew signal (caller holds the router lock on the submit path)."""
+        return self._lane_submitted - self._lane_finished
+
+    def _on_sampled(self, req: ServeRequest):
+        self.batchers[req.lane].submit(req)
+        self._work.set()
+
+    def _fail_requests(self, reqs, exc: BaseException):
+        now = self.clock()
+        with self._rid_lock:
+            for req in reqs:
+                self.requests.pop(req.rid, None)
+        with self._router_lock:
+            for req in reqs:
+                if req.lane is not None:
+                    self._lane_finished[req.lane] += 1
+        for req in reqs:
+            req.fail(exc, now)
+
+    # -- compute plane ------------------------------------------------------
+    def _struct(self, bucket: int):
+        if bucket not in self._structs:
+            self._structs[bucket] = build_bucket_structure(
+                bucket, self.fanouts, with_loops=_needs_loops(self.arch_id))
+        return self._structs[bucket]
+
+    def _build_step(self, key: tuple):
+        (bucket,) = key
+        return build_lane_infer_step(self.arch_id, self.cfg,
+                                     self._struct(bucket),
+                                     backend=self.backend,
+                                     placement=self.placement,
+                                     mesh=self.mesh)
+
+    def _build_offline_step(self, key: tuple):
+        # the single-device PR-4 serving step — the parity anchor
+        (bucket,) = key
+        return build_infer_step(self.arch_id, self.cfg, self.store,
+                                self._struct(bucket), backend=self.backend)
+
+    def _gather(self, node_ids: np.ndarray):
+        if self.mode == "sharded":
+            return self._halo(self._x_perm, self._perm_dev, node_ids)
+        return self._fetch_step(node_ids)
+
+    def _collect_ready(self) -> Dict[int, List[ServeRequest]]:
+        ready = {}
+        for lane in range(self.n_lanes):
+            if self.pools.can_dispatch(lane):
+                batch = self.batchers[lane].poll()
+                if batch:
+                    ready[lane] = batch
+        return ready
+
+    def _dispatch_round(self, ready: Dict[int, List[ServeRequest]]):
+        trees = {lane: [t for r in batch for t in r.trees]
+                 for lane, batch in ready.items()}
+        bucket = bucket_for(max(len(ts) for ts in trees.values()),
+                            self.max_batch_seeds)
+        warm = self.steps.builds
+        step = self.steps.get((bucket,))
+        struct = self._struct(bucket)
+        node_ids = np.full((self.n_lanes, struct.n_nodes), -1, np.int64)
+        hop_valid = np.zeros((self.n_lanes, struct.n_hop_edges), bool)
+        for lane, ts in trees.items():
+            node_ids[lane], hop_valid[lane] = stack_trees(ts, bucket,
+                                                          self.fanouts)
+        x = self._gather(node_ids)
+        out = step(self.params, x, node_ids, hop_valid)  # async dispatch
+        slots = {lane: self.pools.acquire(lane, ready[lane][0].rid)
+                 for lane in ready}
+        with self._stats_lock:
+            self.bucket_counts[bucket] += 1
+            self.n_rounds += 1
+            self.bucket_hits += int(self.steps.builds == warm)
+            for lane in ready:
+                self._lane_batches[lane] += 1
+        self._inflight.append((ready, out, slots))
+
+    def _finalize_one(self):
+        ready, out, slots = self._inflight.popleft()
+        out = np.asarray(out)                          # device sync
+        now = self.clock()
+        n_done = 0
+        for lane, batch in ready.items():
+            row = 0
+            for req in batch:
+                k = req.n_seeds
+                req.finish(out[lane, row:row + k].copy(), now)
+                row += k
+            n_done += len(batch)
+            self.pools.release(lane, slots[lane])
+        with self._rid_lock:
+            for batch in ready.values():
+                for req in batch:
+                    self.requests.pop(req.rid, None)
+        with self._router_lock:
+            for lane, batch in ready.items():
+                self._lane_finished[lane] += len(batch)
+        with self._stats_lock:
+            self.n_served += n_done
+            for lane, batch in ready.items():
+                self._lane_served[lane] += len(batch)
+                self.latencies.extend(r.latency for r in batch)
+
+    def _engine_loop(self):
+        while not self._stop.is_set():
+            ready = self._collect_ready()
+            if ready:
+                self._dispatch_round(ready)
+                while len(self._inflight) > self.inflight_depth:
+                    self._finalize_one()
+            elif self._inflight:
+                # nothing ripe: retire the oldest round (its sync overlaps
+                # the sampler workers refilling the lane batchers)
+                self._finalize_one()
+            else:
+                self._work.wait(timeout=0.002)
+                self._work.clear()
+        # shutdown flush: everything still pending forms final rounds
+        # (retire in-flight rounds before each dispatch so lane slot pools
+        # can never over-subscribe; throughput is moot at shutdown)
+        leftovers = [collections.deque(b.flush()) for b in self.batchers]
+        while any(leftovers):
+            while self._inflight:
+                self._finalize_one()
+            self._dispatch_round({lane: dq.popleft()
+                                  for lane, dq in enumerate(leftovers)
+                                  if dq})
+        while self._inflight:
+            self._finalize_one()
+
+    # -- lifecycle / utilities ---------------------------------------------
+    def warmup(self, buckets: Optional[Sequence[int]] = None):
+        """Compile the bucket ladder (fetch + lane step per bucket) ahead of
+        traffic — first call per shape is the jit trace + compile."""
+        import jax
+        buckets = (all_buckets(self.max_batch_seeds) if buckets is None
+                   else buckets)
+        for b in buckets:
+            step = self.steps.get((b,))
+            struct = self._struct(b)
+            node_ids = np.full((self.n_lanes, struct.n_nodes), -1, np.int64)
+            hop_valid = np.zeros((self.n_lanes, struct.n_hop_edges), bool)
+            x = self._gather(node_ids)
+            jax.block_until_ready(step(self.params, x, node_ids, hop_valid))
+
+    def offline_replay(self, req: ServeRequest) -> np.ndarray:
+        """Single-device offline replay of one request: re-sample its trees
+        through the deterministic data plane, then the bucket-1 single-lane
+        step one tree at a time — must equal ``req.result`` to ≤1e-5, the
+        cluster parity contract (every mode, every placement)."""
+        trees = self._sampler.sample_for(req.seeds, req.rid)
+        step = self._offline_steps.get((1,))
+        out = []
+        for tree in trees:
+            node_ids, hop_valid = stack_trees([tree], 1, self.fanouts)
+            out.append(np.asarray(step(self.params, node_ids, hop_valid)))
+        return np.concatenate(out, axis=0)
+
+    def drain(self, timeout: float = 120.0):
+        """Block until every submitted request has a result."""
+        deadline = time.monotonic() + timeout
+        with self._rid_lock:
+            pending = list(self.requests.values())
+        for req in pending:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise TimeoutError("drain timed out")
+            req.wait(left)
+
+    def reset_stats(self):
+        with self._stats_lock:
+            self.bucket_counts.clear()
+            self.bucket_hits = 0
+            self.n_served = 0
+            self.n_rounds = 0
+            self._lane_served[:] = 0
+            self._lane_batches[:] = 0
+            self.latencies.clear()
+
+    def lane_stats(self) -> dict:
+        with self._stats_lock, self._router_lock:
+            served = self._lane_served.copy()
+            return {
+                "submitted": self._lane_submitted.tolist(),
+                "served": served.tolist(),
+                "batches": self._lane_batches.tolist(),
+                "queue_depths": self.queue_depths().tolist(),
+                "served_spread": (utilization_spread(served)
+                                  if served.sum() else 1.0),
+            }
+
+    def stats(self) -> dict:
+        with self._stats_lock:
+            lat = np.asarray(self.latencies, np.float64)
+
+            def pct(q):
+                return float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
+            return {
+                "mode": self.mode, "placement": self.placement,
+                "n_lanes": self.n_lanes,
+                "n_served": self.n_served, "n_rounds": self.n_rounds,
+                "bucket_counts": dict(self.bucket_counts),
+                "bucket_hits": self.bucket_hits,
+                "recompiles": self.steps.builds,
+                "reseeds": self.router.reseeds,
+                "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+            }
+
+    def close(self):
+        """Graceful shutdown: samplers stop FIRST so no request can reach a
+        batcher after the engine thread's final flush."""
+        if self._closing:
+            return
+        self._closing = True
+        self._sampler.close()
+        self._stop.set()
+        self._work.set()
+        self._engine.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -41,6 +41,131 @@ def _needs_loops(arch_id: str) -> bool:
     return _arch_key(arch_id) == "gcn"
 
 
+def default_tree_keys(rid: int, n: int) -> np.ndarray:
+    """One counter-hash stream per (request, seed index): deterministic,
+    independent of how requests group into sampling calls — the key layout
+    every serving engine in the repo (single-lane and cluster) shares, so
+    offline replay re-derives the exact served trees from ``rid`` alone."""
+    return (np.uint64(rid) << np.uint64(16)) + np.arange(n, dtype=np.uint64)
+
+
+class SamplerPool:
+    """Data-plane worker pool shared by the single-lane server and the
+    cluster tier: samples each submitted request's fanout trees
+    (``sparse.sampler``) on daemon threads, draining whatever else is queued
+    into one vectorized forest pass (the counter-based draws make grouped
+    sampling identical to per-request sampling), then hands the request to
+    ``on_ready``.  A failing request is isolated and reported through
+    ``on_error`` without killing its groupmates or the worker."""
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray,
+                 fanouts: Sequence[int], key: int, *,
+                 on_ready, on_error, n_workers: int = 2,
+                 tree_keys=default_tree_keys, group_cap: int = 64):
+        self.indptr = np.asarray(indptr)
+        self.indices = np.asarray(indices)
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.key = key
+        self.tree_keys = tree_keys
+        self.on_ready = on_ready
+        self.on_error = on_error
+        self.group_cap = int(group_cap)
+        self._q: "queue.Queue[Optional[ServeRequest]]" = queue.Queue()
+        self._workers = [threading.Thread(target=self._worker, daemon=True,
+                                          name=f"gnn-serve-sampler-{i}")
+                         for i in range(max(int(n_workers), 1))]
+        for w in self._workers:
+            w.start()
+
+    def submit(self, req: ServeRequest):
+        self._q.put(req)
+
+    def submit_block(self, reqs: Sequence[ServeRequest]):
+        """Enqueue a pre-formed block as ONE queue item — a worker folds the
+        whole block into a single vectorized forest pass (the bulk-ingest
+        path: per-item queue overhead would otherwise dominate a burst)."""
+        if reqs:
+            self._q.put(list(reqs))
+
+    def sample_for(self, seeds, rid: int) -> list:
+        """The pool's sampling, re-runnable offline (parity anchor)."""
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        return sampler.sample_forest(self.indptr, self.indices, seeds,
+                                     self.fanouts, key=self.key,
+                                     tree_keys=self.tree_keys(
+                                         rid, seeds.shape[0]))
+
+    def _sample_group(self, group):
+        seeds_all = np.concatenate([r.seeds for r in group])
+        keys = np.concatenate([self.tree_keys(r.rid, r.n_seeds)
+                               for r in group])
+        trees = sampler.sample_forest(self.indptr, self.indices, seeds_all,
+                                      self.fanouts, key=self.key,
+                                      tree_keys=keys)
+        i = 0
+        for req in group:                     # assign everything first so a
+            req.trees = trees[i:i + req.n_seeds]  # failure submits nothing
+            i += req.n_seeds
+        for req in group:
+            self.on_ready(req)
+
+    def _sample_isolated(self, group):
+        """Per-request fallback: innocent groupmates still serve."""
+        for r in group:
+            try:
+                self._sample_group([r])
+            except Exception as exc:  # noqa: BLE001
+                self.on_error([r], exc)
+
+    def _worker(self):
+        while True:
+            req = self._q.get()
+            if req is None:
+                return
+            group = list(req) if isinstance(req, list) else [req]
+            while len(group) < self.group_cap:
+                try:
+                    nxt = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:           # shutdown sentinel: hand it back
+                    self._q.put(None)
+                    break
+                group.extend(nxt) if isinstance(nxt, list) else \
+                    group.append(nxt)
+            try:
+                self._sample_group(group)
+            except Exception:  # noqa: BLE001 — isolate the bad request(s);
+                # the worker (and every later request routed to it) survives
+                self._sample_isolated(group)
+
+    def close(self):
+        """Join the workers, then sample anything still queued (parked
+        behind a sentinel) inline on the calling thread — everything
+        submitted before ``close`` still reaches ``on_ready``."""
+        for _ in self._workers:
+            self._q.put(None)
+        for w in self._workers:
+            # unbounded: a worker always terminates (its group is bounded
+            # and sampling is finite) — a timed join that gave up would let
+            # the straggler submit to a consumer nobody reads anymore
+            w.join()
+        leftovers = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                leftovers.extend(item) if isinstance(item, list) else \
+                    leftovers.append(item)
+        if leftovers:
+            try:
+                self._sample_group(leftovers)
+            except Exception:  # noqa: BLE001
+                self._sample_isolated(leftovers)
+
+
 class GNNServer:
     """Dynamic-batching inference server over a resident graph."""
 
@@ -82,20 +207,17 @@ class GNNServer:
         self.latencies: "collections.deque[float]" = collections.deque(
             maxlen=4096)
 
-        # data plane: sampler workers
-        self._sample_q: "queue.Queue[Optional[ServeRequest]]" = queue.Queue()
-        self._workers = [threading.Thread(target=self._sample_worker,
-                                          daemon=True,
-                                          name=f"gnn-serve-sampler-{i}")
-                         for i in range(max(int(n_workers), 1))]
+        # data plane: shared sampler worker pool
+        self._sampler = SamplerPool(self.indptr, self.indices, self.fanouts,
+                                    seed, on_ready=self.batcher.submit,
+                                    on_error=self._fail_requests,
+                                    n_workers=n_workers)
         # compute plane: engine loop + in-flight double buffer
         self._closing = False
         self._stop = threading.Event()
         self._inflight: "collections.deque" = collections.deque()
         self._engine = threading.Thread(target=self._engine_loop, daemon=True,
                                         name="gnn-serve-engine")
-        for w in self._workers:
-            w.start()
         self._engine.start()
 
     # -- request plane ------------------------------------------------------
@@ -119,30 +241,10 @@ class GNNServer:
             self._next_rid += 1
             req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
             self.requests[rid] = req
-        self._sample_q.put(req)
+        self._sampler.submit(req)
         return req
 
     # -- data plane ---------------------------------------------------------
-    def _tree_keys(self, rid: int, n: int) -> np.ndarray:
-        # one counter-hash stream per (request, seed index): deterministic,
-        # independent of how requests group into sampling calls
-        return (np.uint64(rid) << np.uint64(16)) + np.arange(
-            n, dtype=np.uint64)
-
-    def _sample_group(self, group):
-        seeds_all = np.concatenate([r.seeds for r in group])
-        keys = np.concatenate([self._tree_keys(r.rid, r.n_seeds)
-                               for r in group])
-        trees = sampler.sample_forest(self.indptr, self.indices, seeds_all,
-                                      self.fanouts, key=self.seed,
-                                      tree_keys=keys)
-        i = 0
-        for req in group:                     # assign everything first so a
-            req.trees = trees[i:i + req.n_seeds]  # failure submits nothing
-            i += req.n_seeds
-        for req in group:
-            self.batcher.submit(req)
-
     def _fail_requests(self, reqs, exc: BaseException):
         now = self.clock()
         with self._rid_lock:
@@ -151,42 +253,9 @@ class GNNServer:
         for req in reqs:
             req.fail(exc, now)
 
-    def _sample_worker(self):
-        while True:
-            req = self._sample_q.get()
-            if req is None:
-                return
-            # drain whatever else is queued: the counter-based draws make
-            # grouped sampling identical to per-request sampling, so the
-            # vectorized forest pass is free parallelism
-            group = [req]
-            while len(group) < 64:
-                try:
-                    nxt = self._sample_q.get_nowait()
-                except queue.Empty:
-                    break
-                if nxt is None:           # shutdown sentinel: hand it back
-                    self._sample_q.put(None)
-                    break
-                group.append(nxt)
-            try:
-                self._sample_group(group)
-            except Exception:  # noqa: BLE001 — isolate the bad request(s);
-                # the worker lane (and every later request routed to it)
-                # must survive, and innocent groupmates must still serve
-                for r in group:
-                    try:
-                        self._sample_group([r])
-                    except Exception as exc:  # noqa: BLE001
-                        self._fail_requests([r], exc)
-
     def sample_for(self, seeds, rid: int) -> list:
         """The data plane's sampling, re-runnable offline (parity anchor)."""
-        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
-        return sampler.sample_forest(self.indptr, self.indices, seeds,
-                                     self.fanouts, key=self.seed,
-                                     tree_keys=self._tree_keys(
-                                         rid, seeds.shape[0]))
+        return self._sampler.sample_for(seeds, rid)
 
     # -- compute plane ------------------------------------------------------
     def _build_step(self, key: tuple):
@@ -305,32 +374,7 @@ class GNNServer:
         if self._closing:
             return
         self._closing = True              # reject new submissions from here
-        for _ in self._workers:
-            self._sample_q.put(None)
-        for w in self._workers:
-            # unbounded: a worker always terminates (its group is bounded
-            # and sampling is finite) — a timed join that gave up would let
-            # the straggler submit to a batcher nobody reads anymore
-            w.join()
-        # anything still queued (e.g. parked behind a sentinel) samples
-        # inline on this thread before the engine flushes
-        leftovers = []
-        while True:
-            try:
-                item = self._sample_q.get_nowait()
-            except queue.Empty:
-                break
-            if item is not None:
-                leftovers.append(item)
-        if leftovers:
-            try:
-                self._sample_group(leftovers)
-            except Exception:  # noqa: BLE001
-                for r in leftovers:
-                    try:
-                        self._sample_group([r])
-                    except Exception as exc:  # noqa: BLE001
-                        self._fail_requests([r], exc)
+        self._sampler.close()             # every accepted request is sampled
         self._stop.set()
         self._engine.join()               # exits within one poll interval
 

@@ -27,11 +27,17 @@ def pack_fifo(pending: Sequence, capacity: int,
     remaining: List = []
     used = 0
     blocked = False
-    for req in pending:
+    for i, req in enumerate(pending):
         size = size_of(req)
         if not blocked and used + size <= capacity:
             taken.append(req)
             used += size
+            if used >= capacity:
+                # sizes are positive, so nothing later can fit — stop
+                # scanning (a deep backlog must cost O(taken) per batch,
+                # not O(backlog): the serving engines call this per round)
+                remaining.extend(pending[i + 1:])
+                break
         else:
             remaining.append(req)
             if not skip_ahead:
@@ -83,3 +89,39 @@ class SlotPool:
     def live(self) -> List[Tuple[int, object]]:
         """(slot, rid) pairs of occupied lanes, slot-ordered."""
         return [(i, r) for i, r in enumerate(self._rids) if r is not None]
+
+
+class LaneSlotPools:
+    """One ``SlotPool`` per serving lane — the cluster tier's in-flight
+    bookkeeping (DESIGN.md §11).
+
+    Each lane may have at most ``slots_per_lane`` batches in flight (the
+    double-buffer depth); a lane whose pool is full is skipped when the
+    engine assembles the next round — per-lane backpressure instead of a
+    global stall.  ``depths()`` doubles as the router's load signal.
+    """
+
+    def __init__(self, n_lanes: int, slots_per_lane: int):
+        if n_lanes <= 0:
+            raise ValueError(f"n_lanes must be positive, got {n_lanes}")
+        self.pools = [SlotPool(slots_per_lane) for _ in range(n_lanes)]
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.pools)
+
+    def can_dispatch(self, lane: int) -> bool:
+        return self.pools[lane].free_count > 0
+
+    def acquire(self, lane: int, tag) -> int:
+        slot = self.pools[lane].acquire(tag)
+        if slot is None:
+            raise RuntimeError(f"lane {lane} has no free in-flight slot")
+        return slot
+
+    def release(self, lane: int, slot: int):
+        return self.pools[lane].release(slot)
+
+    def depths(self) -> List[int]:
+        """In-flight batch count per lane."""
+        return [p.n_slots - p.free_count for p in self.pools]

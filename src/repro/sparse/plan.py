@@ -291,6 +291,55 @@ def plan_with_values(plan: AggregationPlan,
     return dataclasses.replace(plan, **kw)
 
 
+# ---------------------------------------------------------------------------
+# Feature-shard plan — the serving cluster's sharded-residency layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FeatureShardPlan:
+    """DRHM row-sharded residency for a resident feature table (serving
+    cluster, DESIGN.md §11): lane ``i`` of ``n_lanes`` owns permuted row
+    slots ``[i·R, (i+1)·R)``.  Because the DRHM permutation is a bijection,
+    every lane holds exactly ``R = n_pad / n_lanes`` rows — exact balance,
+    independent of which nodes are popular.
+
+    ``perm`` maps a *padded* row id (ghost row included, id ``n_rows-1``) to
+    its permuted slot; the halo-exchange gather uses it to translate a
+    sampled subgraph's global node ids into slots of the sharded table."""
+
+    n_rows: int                  # padded row count incl. ghost row
+    n_lanes: int
+    n_pad: int                   # permuted slot count (n_lanes-divisible)
+    gamma: int
+    perm: np.ndarray             # (n_pad,) row id -> permuted slot
+    inv_perm: np.ndarray         # (n_pad,) permuted slot -> row id
+
+    @property
+    def rows_per_lane(self) -> int:
+        return self.n_pad // self.n_lanes
+
+    def owner_of(self, row_ids: np.ndarray) -> np.ndarray:
+        return self.perm[row_ids] // self.rows_per_lane
+
+    def permute_table(self, table: np.ndarray) -> np.ndarray:
+        """Lay a host feature table (ghost row last) out in permuted slot
+        order; pad slots (beyond ``n_rows``) are zero, like the ghost row."""
+        out = np.zeros((self.n_pad,) + table.shape[1:], table.dtype)
+        out[self.perm[:table.shape[0]]] = table
+        return out
+
+
+def plan_feature_sharding(n_rows: int, n_lanes: int,
+                          gamma: int = 0x9E3779B1) -> FeatureShardPlan:
+    """DRHM shard plan for a resident feature table of ``n_rows`` rows
+    (ghost row included) over ``n_lanes`` serving lanes."""
+    from repro.core import drhm
+    sp = drhm.plan_row_sharding(n_rows, n_lanes, gamma)
+    return FeatureShardPlan(n_rows=n_rows, n_lanes=n_lanes, n_pad=sp.n_pad,
+                            gamma=sp.gamma, perm=sp.perm,
+                            inv_perm=sp.inv_perm)
+
+
 def plan_from_graph(g, *, n_rows: Optional[int] = None,
                     **kwargs) -> AggregationPlan:
     """Plan for a padded ``Graph``.  ``n_rows`` defaults to ``n_nodes + 1``

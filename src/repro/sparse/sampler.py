@@ -204,17 +204,21 @@ def sample_forest(indptr: np.ndarray, indices: np.ndarray,
         lanes *= f
 
     # split back into per-tree SampledSubgraphs; the hop sender/receiver
-    # arithmetic is identical for every single-seed tree (compute once)
+    # arithmetic is identical for every single-seed tree (compute once),
+    # and every tree's node table is a ROW VIEW of one stacked (T, nodes)
+    # concatenation — per-tree python assembly was the serving data plane's
+    # hot spot at cluster drain-group sizes
     tmpl = hop_slots(1, fanouts)
     tmpl_s = [s for s, _ in tmpl]
     tmpl_r = [r for _, r in tmpl]
     sizes = [1] + budget(1, fanouts)            # per-tree level sizes
+    nodes_all = np.concatenate(
+        [levels[lv].reshape(n_trees, s) for lv, s in enumerate(sizes)],
+        axis=1)                                  # (T, nodes_per_tree)
     out = []
     for t in range(n_trees):
-        node_ids = np.concatenate(
-            [levels[lv][t * s:(t + 1) * s] for lv, s in enumerate(sizes)])
         out.append(SampledSubgraph(
-            node_ids=node_ids, hop_senders=tmpl_s, hop_receivers=tmpl_r,
+            node_ids=nodes_all[t], hop_senders=tmpl_s, hop_receivers=tmpl_r,
             hop_valid=[valid_hops[h][t] for h in range(len(fanouts))],
             n_seeds=1))
     return out

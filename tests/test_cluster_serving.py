@@ -1,0 +1,309 @@
+"""Scale-out serving tier (DESIGN.md §11): DRHM router invariants + cluster
+parity across modes/placements.
+
+Router tests are pure host logic.  Replicated/stacked cluster tests run on
+any device count (the vmapped lane step is device-agnostic).  Sharded-mode
+and mesh-placement tests need the emulated 8-device mesh: they run directly
+when ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` is set (the CI
+multi-device leg), and tier-1 single-device runs exercise them through one
+subprocess smoke instead.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import drhm
+from repro.launch.gnn_serve import build_world
+from repro.serve import ClusterServer, DRHMRouter, utilization_spread
+
+N_LANES = 8
+multi_device = pytest.mark.skipif(
+    jax.device_count() < N_LANES,
+    reason=f"needs {N_LANES} devices (the CI multi-device leg sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# Router invariants
+# ---------------------------------------------------------------------------
+
+def test_router_map_is_exact_balance_bijection():
+    """Every epoch's bin→lane map gives each lane exactly n_bins/n_lanes
+    bins — the DRHM bijectivity property carried up to routing."""
+    r = DRHMRouter(N_LANES, n_bins=1024, seed=3)
+    for _ in range(5):
+        lane_map = r.lane_map()
+        counts = np.bincount(lane_map, minlength=N_LANES)
+        assert (counts == r.n_bins // N_LANES).all(), counts
+        r.reseed()
+
+
+def test_reseed_changes_the_map():
+    r = DRHMRouter(N_LANES, n_bins=1024, seed=0)
+    before = r.lane_map()
+    gamma_before = r.gamma
+    r.reseed()
+    assert r.gamma != gamma_before
+    after = r.lane_map()
+    assert (before != after).mean() > 0.5     # most bins moved lanes
+
+def test_route_gamma_is_odd_and_epoch_dependent():
+    gs = {drhm.route_gamma(7, k) for k in range(32)}
+    assert len(gs) == 32
+    assert all(g % 2 == 1 for g in gs)
+
+
+def test_routing_deterministic_and_in_range():
+    r = DRHMRouter(N_LANES, seed=1)
+    lanes = [r.lane_of([i]) for i in range(256)]
+    assert lanes == [r.lane_of([i]) for i in range(256)]
+    assert all(0 <= ln < N_LANES for ln in lanes)
+
+
+def test_uniform_traffic_does_not_reseed():
+    r = DRHMRouter(N_LANES, seed=0)
+    rng = np.random.default_rng(0)
+    depths = rng.poisson(6.0, N_LANES) + 1
+    assert not r.maybe_reseed(depths)
+    assert r.reseeds == 0
+
+
+def test_skewed_depths_trigger_reseed_and_rebalance():
+    """An adversarial stream (every seed routed to lane 0 under γ₀) must
+    trigger a reseed, and the SAME seeds re-routed under the new γ must
+    spread to ≤1.5× mean — the paper's dynamic-reseeding claim at traffic
+    level."""
+    r = DRHMRouter(N_LANES, n_bins=1024, seed=5)
+    hot = [i for i in range(4096) if r.lane_of([i]) == 0]
+    assert len(hot) > 300                     # ~1/8 of ids hit lane 0
+    pre = np.bincount([r.lane_of([s]) for s in hot], minlength=N_LANES)
+    assert utilization_spread(pre) == pytest.approx(N_LANES)
+    depths = pre.astype(float)
+    assert r.maybe_reseed(depths)             # max ≫ 1.5 × mean
+    post = np.bincount([r.lane_of([s]) for s in hot], minlength=N_LANES)
+    assert post.sum() == len(hot)
+    assert utilization_spread(post) <= 1.5, post
+
+
+def test_in_flight_requests_drain_on_the_old_map():
+    """A request's lane is pinned at submit; reseeding only redirects
+    future traffic."""
+    cfg, params, indptr, indices, store = build_world("sage", 256, 1024, 8,
+                                                      seed=0)
+    srv = ClusterServer("sage", cfg, params, indptr, indices, store,
+                        n_lanes=4, fanouts=(2, 2), backend="dense", seed=0)
+    with srv:
+        reqs = srv.submit_many([[i % 256] for i in range(16)])
+        lanes_at_submit = [r.lane for r in reqs]
+        srv.router.reseed()
+        srv.drain()
+        assert [r.lane for r in reqs] == lanes_at_submit
+        served = np.asarray(srv.lane_stats()["served"])
+        routed = np.bincount(lanes_at_submit, minlength=4)
+        assert (served == routed).all()
+
+
+# ---------------------------------------------------------------------------
+# Cluster serving — replicated / stacked (device-count agnostic)
+# ---------------------------------------------------------------------------
+
+ARCHS = ("gcn", "sage", "gat")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_replicated_parity_vs_offline_replay(arch):
+    cfg, params, indptr, indices, store = build_world(arch, 512, 2048, 16,
+                                                      seed=0)
+    srv = ClusterServer(arch, cfg, params, indptr, indices, store,
+                        n_lanes=4, fanouts=(3, 2), backend="dense", seed=0,
+                        max_batch_seeds=4)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many(
+            [np.random.default_rng(i).integers(0, 512, 1 + i % 4)
+             for i in range(24)])
+        srv.drain()
+        for r in reqs:
+            ref = srv.offline_replay(r)
+            assert r.result.shape == ref.shape
+            np.testing.assert_allclose(r.result, ref, atol=1e-5)
+
+
+def test_zero_steady_state_recompiles():
+    cfg, params, indptr, indices, store = build_world("gcn", 512, 2048, 16,
+                                                      seed=0)
+    srv = ClusterServer("gcn", cfg, params, indptr, indices, store,
+                        n_lanes=4, fanouts=(3, 2), backend="dense", seed=0,
+                        max_batch_seeds=4)
+    with srv:
+        srv.warmup()
+        for r in srv.submit_many([[i % 512] for i in range(32)]):
+            r.wait(120)
+        builds = srv.steps.builds
+        for r in srv.submit_many([[(7 * i) % 512] for i in range(32)]):
+            r.wait(120)
+        assert srv.steps.builds == builds
+
+
+def test_cluster_rejects_bad_requests_and_archs():
+    cfg, params, indptr, indices, store = build_world("gcn", 128, 512, 8,
+                                                      seed=0)
+    with pytest.raises(ValueError, match="single-device only"):
+        ClusterServer("schnet", cfg, params, indptr, indices, store)
+    srv = ClusterServer("gcn", cfg, params, indptr, indices, store,
+                        n_lanes=2, fanouts=(2, 2), backend="dense")
+    with srv:
+        with pytest.raises(ValueError, match="out of range"):
+            srv.submit([999])
+        with pytest.raises(ValueError, match="seeds"):
+            srv.submit_many([[]])
+
+
+def test_e2e_reseed_rebalances_skewed_stream():
+    """Adversarial burst through the live server: the router reseeds and
+    post-reseed routing spreads to ≤1.5× mean."""
+    cfg, params, indptr, indices, store = build_world("sage", 1024, 4096, 8,
+                                                      seed=0)
+    srv = ClusterServer("sage", cfg, params, indptr, indices, store,
+                        n_lanes=4, fanouts=(2, 2), backend="dense", seed=0,
+                        max_batch_seeds=4, reseed_check_every=16)
+    probe = DRHMRouter(4, seed=0)
+    hot = [i for i in range(1024) if probe.lane_of([i]) == 0]
+    rng = np.random.default_rng(1)
+    with srv:
+        srv.warmup()
+        srv.submit_many([[int(rng.choice(hot))] for _ in range(256)])
+        srv.drain()
+        info = srv.router.info()
+        assert info["reseeds"] >= 1
+        post = np.sum([np.asarray(c, float)
+                       for c in info["routed_per_epoch"][1:]], axis=0)
+        assert post.sum() > 64                # plenty routed after reseed
+        assert utilization_spread(post) <= 1.5
+        st = srv.stats()
+        assert st["n_served"] == 256
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: sharded residency + mesh placement (direct on the CI leg)
+# ---------------------------------------------------------------------------
+
+def _trace(n_nodes, n=48, k=2, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, n_nodes, k) for _ in range(n)]
+
+
+@multi_device
+@pytest.mark.parametrize("arch", ARCHS)
+def test_sharded_bitwise_matches_replicated(arch):
+    cfg, params, indptr, indices, store = build_world(arch, 512, 2048, 16,
+                                                      seed=0)
+    results = {}
+    for mode in ("replicated", "sharded"):
+        srv = ClusterServer(arch, cfg, params, indptr, indices, store,
+                            n_lanes=N_LANES, mode=mode, fanouts=(3, 2),
+                            backend="dense", seed=0, max_batch_seeds=4)
+        with srv:
+            srv.warmup()
+            reqs = srv.submit_many(_trace(512))
+            srv.drain()
+            results[mode] = np.concatenate([r.result for r in reqs])
+    assert np.array_equal(results["sharded"], results["replicated"])
+
+
+@multi_device
+def test_mesh_placement_bitwise_matches_stacked():
+    cfg, params, indptr, indices, store = build_world("gcn", 512, 2048, 16,
+                                                      seed=0)
+    results = {}
+    for placement in ("stacked", "mesh"):
+        srv = ClusterServer("gcn", cfg, params, indptr, indices, store,
+                            n_lanes=N_LANES, placement=placement,
+                            fanouts=(3, 2), backend="dense", seed=0,
+                            max_batch_seeds=4)
+        with srv:
+            srv.warmup()
+            reqs = srv.submit_many(_trace(512))
+            srv.drain()
+            results[placement] = np.concatenate([r.result for r in reqs])
+    assert np.array_equal(results["mesh"], results["stacked"])
+
+
+@multi_device
+def test_sharded_parity_vs_offline_replay():
+    cfg, params, indptr, indices, store = build_world("gcn", 512, 2048, 16,
+                                                      seed=0)
+    srv = ClusterServer("gcn", cfg, params, indptr, indices, store,
+                        n_lanes=N_LANES, mode="sharded", fanouts=(3, 2),
+                        backend="dense", seed=0, max_batch_seeds=4)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many(_trace(512, n=24))
+        srv.drain()
+        for r in reqs:
+            np.testing.assert_allclose(r.result, srv.offline_replay(r),
+                                       atol=1e-5)
+
+
+def test_sharded_requires_devices():
+    if jax.device_count() >= N_LANES:
+        pytest.skip("only meaningful on a single-device run")
+    cfg, params, indptr, indices, store = build_world("gcn", 128, 512, 8,
+                                                      seed=0)
+    with pytest.raises(ValueError, match="devices"):
+        ClusterServer("gcn", cfg, params, indptr, indices, store,
+                      n_lanes=N_LANES, mode="sharded")
+
+
+SUBPROCESS_SMOKE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.launch.gnn_serve import build_world
+from repro.serve import ClusterServer
+
+cfg, params, indptr, indices, store = build_world("gcn", 256, 1024, 8, 0)
+rng = np.random.default_rng(3)
+traces = [rng.integers(0, 256, 2) for _ in range(32)]
+out = {}
+for mode in ("replicated", "sharded"):
+    srv = ClusterServer("gcn", cfg, params, indptr, indices, store,
+                        n_lanes=8, mode=mode, fanouts=(2, 2),
+                        backend="dense", seed=0, max_batch_seeds=4)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many(traces)
+        srv.drain()
+        out[mode] = np.concatenate([r.result for r in reqs])
+        ref = np.concatenate([srv.offline_replay(r) for r in reqs[:8]])
+        got = np.concatenate([r.result for r in reqs[:8]])
+        assert abs(got - ref).max() <= 1e-5
+assert np.array_equal(out["sharded"], out["replicated"])
+print("CLUSTER_OK")
+"""
+
+
+def test_sharded_cluster_subprocess():
+    """Tier-1 single-device runs still exercise the 8-device sharded path
+    (the CI multi-device leg runs the direct tests above instead)."""
+    if jax.device_count() >= N_LANES:
+        pytest.skip("direct multi-device tests cover this")
+    repo = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_SMOKE], capture_output=True,
+        text=True,
+        # JAX_PLATFORMS must survive into the child: without it jax may
+        # probe accelerator backends (e.g. a baked-in libtpu) and hang for
+        # minutes on metadata timeouts
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+        timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "CLUSTER_OK" in proc.stdout

@@ -1,0 +1,105 @@
+"""Perf-trajectory gate (benchmarks/trajectory.py) — pure host logic."""
+import json
+
+import pytest
+
+from benchmarks import trajectory
+
+
+def rec(**kw):
+    base = {"kind": "scaling", "arch": "gcn", "backend": "dense",
+            "n_lanes": 8, "scaling_vs_1lane": 3.2, "reqs_per_s": 6000.0,
+            "parity_max_dev_vs_offline": 0.0, "bitwise_match": True}
+    base.update(kw)
+    return base
+
+
+def test_records_of_accepts_both_shapes():
+    assert trajectory.records_of([rec()]) == [rec()]
+    assert trajectory.records_of({"records": [rec()]}) == [rec()]
+
+
+def test_key_ignores_measurements():
+    a, b = rec(), rec(scaling_vs_1lane=1.0, reqs_per_s=1.0,
+                      parity_max_dev_vs_offline=0.5)
+    assert trajectory.key_of(a) == trajectory.key_of(b)
+    assert trajectory.key_of(rec(arch="sage")) != trajectory.key_of(a)
+
+
+def test_identical_runs_pass():
+    assert trajectory.compare([rec()], [rec()]) == []
+
+
+def test_speedup_regression_fails_at_20pct():
+    base, ok, bad = [rec()], [rec(scaling_vs_1lane=2.7)], \
+        [rec(scaling_vs_1lane=2.4)]
+    assert trajectory.compare(base, ok) == []
+    fails = trajectory.compare(base, bad)
+    assert len(fails) == 1 and "scaling_vs_1lane" in fails[0]
+
+
+def test_raw_timings_are_not_gated():
+    slow = [rec(reqs_per_s=100.0)]          # 60× slower runner: fine
+    assert trajectory.compare([rec()], slow) == []
+
+
+def test_parity_drift_fails():
+    fails = trajectory.compare([rec()], [rec(
+        parity_max_dev_vs_offline=1e-3)], parity_tol=1e-5)
+    assert len(fails) == 1 and "parity" in fails[0]
+    # within tolerance is fine even if baseline was exactly zero
+    assert trajectory.compare([rec()], [rec(
+        parity_max_dev_vs_offline=5e-6)], parity_tol=1e-5) == []
+
+
+def test_boolean_invariant_flip_fails():
+    fails = trajectory.compare([rec()], [rec(bitwise_match=False)])
+    assert len(fails) == 1 and "bitwise_match" in fails[0]
+
+
+def test_missing_record_is_coverage_loss():
+    fails = trajectory.compare([rec(), rec(arch="sage")], [rec()])
+    assert len(fails) == 1 and "missing" in fails[0]
+    # extra fresh records are fine (new benchmarks may land first)
+    assert trajectory.compare([rec()], [rec(), rec(arch="sage")]) == []
+
+
+def test_append_accumulates_and_carries_history(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps([rec()]))       # legacy list shape
+    assert trajectory.main(["--append", str(p)]) == 0
+    data = json.loads(p.read_text())
+    assert len(data["trajectory"]) == 1
+    assert data["records"] == [rec()]
+    assert trajectory.main(["--append", str(p)]) == 0
+    data = json.loads(p.read_text())
+    assert len(data["trajectory"]) == 2
+    snap = data["trajectory"][-1]
+    assert "t" in snap and snap["metrics"]
+
+
+def test_compare_cli_gates_and_carries(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "BENCH_cluster.json"
+    base.write_text(json.dumps(
+        {"records": [rec()],
+         "trajectory": [{"t": "2026-01-01T00:00:00+00:00", "sha": None,
+                         "metrics": {}}]}))
+    fresh.write_text(json.dumps([rec(scaling_vs_1lane=3.1)]))
+    assert trajectory.main(["--compare", str(base), str(fresh)]) == 0
+    data = json.loads(fresh.read_text())
+    assert len(data["trajectory"]) == 2     # baseline history + new snapshot
+
+    fresh.write_text(json.dumps([rec(scaling_vs_1lane=1.0)]))
+    assert trajectory.main(["--compare", str(base), str(fresh)]) == 1
+
+
+def test_trajectory_is_bounded(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps(
+        {"records": [rec()],
+         "trajectory": [{"t": f"{i}", "sha": None, "metrics": {}}
+                        for i in range(trajectory.MAX_TRAJECTORY + 5)]}))
+    trajectory.main(["--append", str(p)])
+    data = json.loads(p.read_text())
+    assert len(data["trajectory"]) == trajectory.MAX_TRAJECTORY

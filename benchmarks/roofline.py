@@ -1,5 +1,29 @@
-"""§Roofline table — aggregates the dry-run JSON records into the
-per-(arch × shape × mesh) three-term roofline table (EXPERIMENTS.md source).
+"""§Roofline — dry-run table aggregation + the measured kernel roofline.
+
+Two halves:
+
+* ``load``/``markdown_table`` aggregate the dry-run JSON records into the
+  per-(arch × shape × mesh) three-term roofline table (EXPERIMENTS.md
+  source) — unchanged, and empty when no dry-run artifacts exist;
+* the **measured** roofline: ``measure_peak`` times a dense matmul and an
+  elementwise copy on THIS runner (peak GFLOP/s and GB/s of whatever
+  machine is executing — CPU under ``JAX_PLATFORMS=cpu``, a TPU core on
+  hardware), the traffic models below count the bytes/flops a kernel
+  launch actually moves, and ``roofline_frac = t_bound / t_measured`` says
+  how close the launch runs to its own hardware limit.  Self-normalized
+  against same-runner peaks, the fraction is machine-independent enough to
+  gate: ``benchmarks.trajectory`` treats ``roofline_frac`` as a ratio
+  metric (>20% drop vs the committed baseline fails CI).
+
+The int8 fast path's whole argument lives in the traffic model: quantized
+operands put ``dtype_bytes = 1`` into ``*_traffic``, the byte term drops
+~4×, and the roofline bound tightens — ``roofline_frac`` then measures
+whether the kernel actually banks the saving.
+
+``main()`` never needs dry-run artifacts or a device: it measures the
+runner's peaks and one flagship Gustavson point (f32 and int8) under the
+kernels' interpret fallback, so the roofline slice runs headless in CI
+instead of silently printing nothing.
 """
 from __future__ import annotations
 
@@ -9,6 +33,12 @@ from pathlib import Path
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments/dryrun"
 
+_PEAK_CACHE = None
+
+
+# ---------------------------------------------------------------------------
+# dry-run aggregation (EXPERIMENTS.md table)
+# ---------------------------------------------------------------------------
 
 def load(mesh: str = "16x16"):
     rows = []
@@ -35,18 +65,156 @@ def markdown_table(mesh: str = "16x16") -> str:
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# measured peaks — the roofline's two ceilings, timed on this runner
+# ---------------------------------------------------------------------------
+
+def measure_peak(mm_dim: int = 1024, copy_mb: int = 64) -> dict:
+    """``{"flops_per_s", "bytes_per_s"}`` measured on the current runner.
+
+    Peak compute: a jitted f32 ``mm_dim³`` matmul (2·n³ flops).  Peak
+    bandwidth: a jitted elementwise copy of ``copy_mb`` MB (read + write).
+    Cached per process — every kernel record normalizes against the SAME
+    measured ceilings, which is what makes ``roofline_frac`` a ratio.
+    """
+    global _PEAK_CACHE
+    if _PEAK_CACHE is not None:
+        return _PEAK_CACHE
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.backend_sweep import timeit
+
+    a = jnp.asarray(np.random.default_rng(0).normal(
+        size=(mm_dim, mm_dim)).astype(np.float32))
+    mm = jax.jit(lambda m: m @ m)
+    mm_us = timeit(mm, a, n=5, warmup=2)
+    flops_per_s = 2.0 * mm_dim**3 / (mm_us * 1e-6)
+
+    n_el = copy_mb * (1 << 20) // 4
+    v = jnp.asarray(np.random.default_rng(1).normal(
+        size=n_el).astype(np.float32))
+    cp = jax.jit(lambda x: x + 1.0)
+    cp_us = timeit(cp, v, n=5, warmup=2)
+    bytes_per_s = 2.0 * n_el * 4 / (cp_us * 1e-6)
+
+    _PEAK_CACHE = {"flops_per_s": flops_per_s, "bytes_per_s": bytes_per_s}
+    return _PEAK_CACHE
+
+
+# ---------------------------------------------------------------------------
+# traffic models — bytes moved / flops folded per kernel launch
+# ---------------------------------------------------------------------------
+
+def aggregate_traffic(n_chunks: int, block_rows: int, width: int, d: int,
+                      n_blocks: int, a_bytes: int = 4,
+                      x_bytes: int = 4) -> tuple:
+    """(bytes, flops) of one Gustavson aggregate launch.
+
+    Per chunk: a (block_rows, width) coefficient tile and a (width, d)
+    gathered-X landing tile stream in; the output (n_blocks·block_rows, d)
+    f32 accumulator is written once.  The MXU folds 2·block_rows·width·d
+    flops per chunk.  ``a_bytes``/``x_bytes`` = 1 on the int8 path — the
+    operand traffic (the dominant term) shrinks 4×.
+    """
+    bytes_moved = (n_chunks * block_rows * width * a_bytes
+                   + n_chunks * width * d * x_bytes
+                   + n_blocks * block_rows * d * 4)
+    flops = 2.0 * n_chunks * block_rows * width * d
+    return float(bytes_moved), float(flops)
+
+
+def spgemm_traffic(n_chunks: int, block_rows: int, width: int,
+                   pad_width: int, n_blocks: int, a_bytes: int = 4,
+                   b_bytes: int = 4) -> tuple:
+    """(bytes, flops) of one hash-pad SpGEMM launch: per-chunk coefficient
+    tile + hashed-B slab rows in, (n_blocks·block_rows, pad_width) f32 pad
+    out, 2·block_rows·width·pad_width flops folded per chunk."""
+    bytes_moved = (n_chunks * block_rows * width * a_bytes
+                   + n_chunks * width * pad_width * b_bytes
+                   + n_blocks * block_rows * pad_width * 4)
+    flops = 2.0 * n_chunks * block_rows * width * pad_width
+    return float(bytes_moved), float(flops)
+
+
+def roofline_frac(us: float, bytes_moved: float, flops: float,
+                  peak: dict = None) -> float:
+    """Fraction of the roofline bound achieved: ``t_bound / t_measured``.
+
+    ``t_bound = max(bytes/peak_bw, flops/peak_flops)`` is the best possible
+    time for this launch on this runner; 1.0 means running AT the hardware
+    limit.  Interpret-mode kernels land far below 1 — the number is only
+    meaningful relative to its own committed baseline (the trajectory
+    gate), never across machines or modes.
+    """
+    if peak is None:
+        peak = measure_peak()
+    t_bound = max(bytes_moved / peak["bytes_per_s"],
+                  flops / peak["flops_per_s"])
+    return float(t_bound / (us * 1e-6))
+
+
+def aggregate_roofline_frac(plan, d: int, us: float, *, q8: bool,
+                            peak: dict = None) -> float:
+    """``roofline_frac`` of a measured aggregate launch, traffic counted
+    from the plan's dedup-chunk layout (int8 operand bytes when ``q8``)."""
+    nb = 1 if q8 else 4
+    bytes_moved, flops = aggregate_traffic(
+        int(plan.ell_u_cols.shape[0]), int(plan.block_rows),
+        int(plan.ell_u_cols.shape[1]), int(d), int(plan.n_blocks),
+        a_bytes=nb, x_bytes=nb)
+    return roofline_frac(us, bytes_moved, flops, peak)
+
+
+def spgemm_roofline_frac(plan, us: float, *, q8: bool,
+                         peak: dict = None) -> float:
+    """``roofline_frac`` of a measured hash-pad SpGEMM launch."""
+    nb = 1 if q8 else 4
+    bytes_moved, flops = spgemm_traffic(
+        int(plan.n_chunks), int(plan.block_rows), int(plan.width),
+        int(plan.pad_width), int(plan.n_blocks), a_bytes=nb, b_bytes=nb)
+    return roofline_frac(us, bytes_moved, flops, peak)
+
+
+# ---------------------------------------------------------------------------
+# headless entry — always measures, never silently empty
+# ---------------------------------------------------------------------------
+
 def main():
     rows = load()
-    print("# roofline summary (single-pod 16x16)")
+    if rows:
+        print("# roofline summary (single-pod 16x16)")
+        print("name,us_per_call,derived")
+        for r in rows:
+            rf = r["roofline"]
+            dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            frac = rf["compute_s"] / dom if dom > 0 else 0.0
+            print(f"roofline_{rf['arch']}__{rf['shape']},"
+                  f"{r['compile_s']*1e6:.0f},"
+                  f"bottleneck={rf['bottleneck']};roofline_frac={frac:.3f};"
+                  f"useful={rf['useful_ratio']:.2f}")
+    else:
+        print("# roofline: no dry-run artifacts — measured mode only")
+
+    # measured roofline — runs on whatever backend jax resolved (interpret
+    # fallback off-TPU), so the slice is never skipped in headless CI
+    import jax
+    from benchmarks.backend_sweep import _sized_inputs, timeit
+    from repro.sparse import backend as sparse_backend
+
+    peak = measure_peak()
+    print(f"measured_peak,flops={peak['flops_per_s']:.3g}/s,"
+          f"bytes={peak['bytes_per_s']:.3g}/s")
+    n, e, d = 4096, 16384, 64
+    plan, x = _sized_inputs(n, e, d)
     print("name,us_per_call,derived")
-    for r in rows:
-        rf = r["roofline"]
-        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
-        frac = rf["compute_s"] / dom if dom > 0 else 0.0
-        print(f"roofline_{rf['arch']}__{rf['shape']},"
-              f"{r['compile_s']*1e6:.0f},"
-              f"bottleneck={rf['bottleneck']};roofline_frac={frac:.3f};"
-              f"useful={rf['useful_ratio']:.2f}")
+    for name, q8 in (("pallas", False), ("pallas_q8", True)):
+        fn = jax.jit(lambda xx, nm=name: sparse_backend.aggregate(
+            plan, None, xx, backend=nm))
+        us = timeit(fn, x)
+        frac = aggregate_roofline_frac(plan, d, us, q8=q8, peak=peak)
+        print(f"roofline_aggregate_{name},{us:.0f},"
+              f"n={n};e={e};d={d};roofline_frac={frac:.4f}")
 
 
 if __name__ == "__main__":

@@ -3,14 +3,32 @@
   PYTHONPATH=src python -m benchmarks.serving_bench            # table + JSON
   PYTHONPATH=src python -m benchmarks.serving_bench --check-json BENCH_serving.json
 
-Per (arch, backend): stand up a ``GNNServer`` over a synthetic power-law
-resident graph, warm the bucket ladder, fire a seeded burst of requests,
-and record req/s, latency percentiles, bucket hit-rates, and the recompile
-counter; then replay the SAME sampled trees offline (one request at a time
-through the bucket-1 step) for the throughput baseline and the ≤1e-5
-parity anchor.  Results go to ``BENCH_serving.json`` (atomic write);
-``--check``/``--check-json`` is CI's serving gate: parity, zero post-warmup
-recompiles, minimum batched speedup, and a p99 sanity bound.
+Per (arch, backend, sampler): stand up a ``GNNServer`` over a synthetic
+power-law resident graph, warm the bucket ladder, fire a seeded burst of
+requests, and record req/s, latency percentiles, bucket hit-rates, and the
+recompile counter; then replay the SAME sampled trees offline (one request
+at a time through the bucket-1 step) for the throughput baseline and the
+≤1e-5 parity anchor.  ``sampler="device"`` cells serve through the fused
+sampling+forward dispatch program (``serve/device_sampler.py``) — the host
+SamplerPool round-trip collapses into the jitted step; parity vs the
+host-sampled offline replay doubles as the splitmix64 device/host
+equivalence check.  ``pallas_q8`` cells swap the f32 parity anchor for the
+quantized gate (``q8_parity_ok`` under the documented ``Q8_E2E_TOL``
+envelope — per-bucket plans quantize with different chunk scales, so exact
+f32 parity is the wrong ask; DESIGN.md §12).
+
+A dedicated ``serve_single_lane`` record measures the device-sampling win
+where batching dynamics cannot mask it: closed-loop one-request-at-a-time
+(submit → wait) through a host-sampled and a device-sampled server,
+median-of-trials req/s each.  ``sampler_fusion_gain`` = fused/host; the
+trajectory-gated invariant is ``sampler_fusion_ok`` (fused path faster),
+plus a conservative floor in ``check`` — the raw gain is too
+runner-noisy for a 20%-drop ratio gate.
+
+Results go to ``BENCH_serving.json`` (atomic write); ``--check``/
+``--check-json`` is CI's serving gate: parity (f32 or quantized), zero
+post-warmup recompiles, minimum batched speedup, a p99 sanity bound, and
+the single-lane fusion floor.
 """
 from __future__ import annotations
 
@@ -22,15 +40,20 @@ import time
 import numpy as np
 
 DEFAULT_JSON = "BENCH_serving.json"
-# (arch, backend) cells measured by default — pallas runs in interpret mode
-# on CPU, so one pallas cell tracks the kernel path without drowning CI
-DEFAULT_CELLS = (("gcn", "dense"), ("gcn", "pallas"), ("sage", "dense"),
-                 ("gin", "dense"))
+# (arch, backend, sampler) cells measured by default — pallas runs in
+# interpret mode on CPU, so one pallas cell tracks the kernel path without
+# drowning CI; the device-sampler cells exercise the fused dispatch program
+# on the dense and quantized compute planes
+DEFAULT_CELLS = (("gcn", "dense", "host"), ("gcn", "pallas", "host"),
+                 ("sage", "dense", "host"), ("gin", "dense", "host"),
+                 ("gcn", "dense", "device"), ("gcn", "pallas_q8", "device"))
+MIN_FUSION_GAIN = 1.1   # single-lane floor: fused sampling must clearly win
 
 
-def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
-               d_in=32, fanouts=(5, 3), max_batch=16, max_wait_ms=2.0,
-               n_requests=96, n_offline=32, workers=2, seed=0) -> dict:
+def bench_cell(arch: str, backend: str, sampler: str = "host", *,
+               n_nodes=2048, n_edges=8192, d_in=32, fanouts=(5, 3),
+               max_batch=16, max_wait_ms=2.0, n_requests=96, n_offline=32,
+               workers=2, seed=0) -> dict:
     from repro.launch.gnn_serve import build_world
     from repro.serve import GNNServer
     from repro.serve.engine import offline_replay
@@ -41,7 +64,7 @@ def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
     seeds = rng.integers(0, n_nodes, n_requests)
 
     server = GNNServer(arch, cfg, params, indptr, indices, store,
-                       fanouts=fanouts, backend=backend,
+                       fanouts=fanouts, backend=backend, sampler=sampler,
                        max_batch_seeds=max_batch, max_wait_ms=max_wait_ms,
                        n_workers=workers, seed=seed)
     with server:
@@ -52,12 +75,18 @@ def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
         for w in [server.submit([int(s)]) for s in seeds[:32]]:
             w.wait(600)
         warm_builds = server.steps.builds
-        server.reset_stats()
-        t0 = time.perf_counter()
-        reqs = [server.submit([int(s)]) for s in seeds]
-        server.drain(timeout=600)
-        dt_batched = time.perf_counter() - t0
-        st = server.stats()
+        # best-of-3 bursts: burst throughput on a shared CPU runner swings
+        # ±30% run-to-run with batch-coalescing timing; the best burst is
+        # the stable statistic (stats/percentiles come from that burst)
+        dt_batched, st = float("inf"), None
+        for _ in range(3):
+            server.reset_stats()
+            t0 = time.perf_counter()
+            reqs = [server.submit([int(s)]) for s in seeds]
+            server.drain(timeout=600)
+            dt = time.perf_counter() - t0
+            if dt < dt_batched:
+                dt_batched, st = dt, server.stats()
         recompiles_steady = server.steps.builds - warm_builds
 
         # offline baseline: the full one-request-at-a-time pipeline —
@@ -67,16 +96,27 @@ def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
         # identical fixed-shape work).  Parity doubles as the replay check:
         # it only holds if re-sampling reproduced the served trees.
         sub = reqs[:n_offline]
-        t0 = time.perf_counter()
-        ref = np.concatenate([offline_replay(server, r) for r in sub])
-        dt_offline = time.perf_counter() - t0
+        # warm the offline path: under device sampling the bucket-1
+        # host-input step is a separate program from the fused serving
+        # steps and would otherwise compile inside the timed window
+        offline_replay(server, sub[0])
+        # best-of-3 passes, mirroring the burst measurement — the
+        # speedup_vs_offline ratio is trajectory-gated, so both of its
+        # terms use the same robust statistic
+        dt_offline, ref = float("inf"), None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = np.concatenate([offline_replay(server, r) for r in sub])
+            dt_offline = min(dt_offline, time.perf_counter() - t0)
+            ref = out
+        dt_offline = max(dt_offline, 1e-9)
         got = np.concatenate([r.result for r in sub])
         parity = float(np.abs(got - ref).max())
 
     reqs_per_s = n_requests / dt_batched
     offline_reqs_per_s = len(sub) / dt_offline
-    return {
-        "arch": arch, "backend": backend,
+    rec = {
+        "arch": arch, "backend": backend, "sampler": sampler,
         "n_nodes": n_nodes, "n_edges": n_edges, "fanouts": list(fanouts),
         "max_batch_seeds": max_batch, "n_requests": n_requests,
         "reqs_per_s": round(reqs_per_s, 2),
@@ -94,19 +134,86 @@ def bench_cell(arch: str, backend: str, *, n_nodes=2048, n_edges=8192,
         "speedup_vs_offline": round(reqs_per_s / offline_reqs_per_s, 2),
         "parity_max_dev_vs_offline": parity,
     }
+    if backend == "pallas_q8":
+        # each bucket quantizes with its own plan's chunk scales, so the
+        # served path and the bucket-1 offline replay round differently —
+        # the documented e2e envelope is the right anchor (DESIGN.md §12)
+        from benchmarks.backend_sweep import Q8_E2E_TOL, _q8ify
+        rec["max_abs_dev_vs_dense"] = rec.pop("parity_max_dev_vs_offline")
+        _q8ify(rec, Q8_E2E_TOL)
+    return rec
+
+
+def bench_single_lane(arch: str = "gcn", backend: str = "dense", *,
+                      n_nodes=2048, n_edges=8192, d_in=32, fanouts=(5, 3),
+                      n_requests=48, trials=5, workers=2, seed=0) -> dict:
+    """Closed-loop single-lane req/s: host-sampled vs fused device-sampled.
+
+    Each request is submitted and awaited before the next (no batching, no
+    coalescing timers — ``max_wait_ms=0``), so the measurement isolates the
+    per-request dispatch path: SamplerPool thread round-trip + step for the
+    host server, one fused jitted program for the device server.  Median of
+    ``trials`` runs each; the ratio is recorded as ``sampler_fusion_gain``
+    and the trajectory-gated invariant ``sampler_fusion_ok``.
+    """
+    import statistics
+
+    from repro.launch.gnn_serve import build_world
+    from repro.serve import GNNServer
+
+    cfg, params, indptr, indices, store = build_world(
+        arch, n_nodes, n_edges, d_in, seed=seed)
+    rng = np.random.default_rng(seed + 3)
+    seeds = rng.integers(0, n_nodes, n_requests)
+
+    def closed_loop(sampler: str) -> float:
+        server = GNNServer(arch, cfg, params, indptr, indices, store,
+                           fanouts=fanouts, backend=backend, sampler=sampler,
+                           max_batch_seeds=16, max_wait_ms=0.0,
+                           n_workers=workers, seed=seed)
+        vals = []
+        with server:
+            server.warmup()
+            for s in seeds[:8]:
+                server.submit([int(s)]).wait(600)
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                for s in seeds:
+                    server.submit([int(s)]).wait(600)
+                vals.append(n_requests / (time.perf_counter() - t0))
+        return statistics.median(vals)
+
+    host = closed_loop("host")
+    fused = closed_loop("device")
+    return {
+        "kind": "serve_single_lane", "arch": arch, "backend": backend,
+        "fanouts": list(fanouts), "n_requests": n_requests,
+        "host_reqs_per_s": round(host, 2),
+        "fused_reqs_per_s": round(fused, 2),
+        "sampler_fusion_gain": round(fused / host, 3),
+        "sampler_fusion_ok": bool(fused / host >= MIN_FUSION_GAIN),
+    }
 
 
 def collect(cells=DEFAULT_CELLS, **kw) -> dict:
     records = []
-    for arch, backend in cells:
-        records.append(bench_cell(arch, backend, **kw))
+    for cell in cells:
+        records.append(bench_cell(*cell, **kw))
         r = records[-1]
-        print(f"  {arch:8s} {backend:8s} {r['reqs_per_s']:9.1f} req/s  "
+        parity = r.get("parity_max_dev_vs_offline", r.get("q8_err_abs", 0.0))
+        print(f"  {r['arch']:8s} {r['backend']:10s} {r['sampler']:6s} "
+              f"{r['reqs_per_s']:9.1f} req/s  "
               f"p50 {r['p50_ms']:7.1f}ms  p99 {r['p99_ms']:7.1f}ms  "
               f"offline {r['offline_reqs_per_s']:7.1f} req/s  "
               f"speedup {r['speedup_vs_offline']:5.2f}x  "
-              f"parity {r['parity_max_dev_vs_offline']:.1e}  "
+              f"parity {parity:.1e}  "
               f"recompiles {r['recompiles_steady_state']}")
+    sl = bench_single_lane()
+    records.append(sl)
+    print(f"  single-lane {sl['arch']}/{sl['backend']}: "
+          f"host {sl['host_reqs_per_s']:.0f} req/s  "
+          f"fused {sl['fused_reqs_per_s']:.0f} req/s  "
+          f"gain {sl['sampler_fusion_gain']:.2f}x")
     return {"bench": "serving", "records": records}
 
 
@@ -129,8 +236,23 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
     robustly on shared runners."""
     failures = 0
     for r in data["records"]:
-        cell = f"{r['arch']}/{r['backend']}"
-        if r["parity_max_dev_vs_offline"] > tol:
+        if r.get("kind") == "serve_single_lane":
+            cell = f"single-lane {r['arch']}/{r['backend']}"
+            if not r["sampler_fusion_ok"] \
+                    or r["sampler_fusion_gain"] < MIN_FUSION_GAIN:
+                print(f"FAIL {cell}: fused sampler gain "
+                      f"{r['sampler_fusion_gain']}x < {MIN_FUSION_GAIN}x "
+                      f"({r['fused_reqs_per_s']} vs "
+                      f"{r['host_reqs_per_s']} req/s)")
+                failures += 1
+            continue
+        cell = f"{r['arch']}/{r['backend']}/{r.get('sampler', 'host')}"
+        if "q8_parity_ok" in r:
+            if not r["q8_parity_ok"]:
+                print(f"FAIL {cell}: quantized parity {r['q8_err_abs']:.2e} "
+                      f"outside the {r['q8_bound']} envelope")
+                failures += 1
+        elif r["parity_max_dev_vs_offline"] > tol:
             print(f"FAIL {cell}: parity {r['parity_max_dev_vs_offline']:.2e} "
                   f"> {tol:.0e}")
             failures += 1
@@ -148,8 +270,8 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
             failures += 1
     if not failures:
         print(f"serving gate OK: {len(data['records'])} cells, parity ≤ "
-              f"{tol:.0e}, 0 steady-state recompiles, "
-              f"speedup ≥ {min_speedup}x")
+              f"{tol:.0e} (f32) / q8 envelope, 0 steady-state recompiles, "
+              f"speedup ≥ {min_speedup}x, fusion gain ≥ {MIN_FUSION_GAIN}x")
     return failures
 
 
@@ -166,8 +288,8 @@ def main(argv=None) -> int:
     ap.add_argument("--p99-cap-ms", type=float, default=60_000.0)
     ap.add_argument("--requests", type=int, default=96)
     ap.add_argument("--cells", default=None,
-                    help="comma list of arch:backend pairs, e.g. "
-                         "gcn:dense,sage:pallas")
+                    help="comma list of arch:backend[:sampler] cells, e.g. "
+                         "gcn:dense,gcn:pallas_q8:device")
     args = ap.parse_args(argv)
 
     if args.check_json:
@@ -179,8 +301,8 @@ def main(argv=None) -> int:
     cells = DEFAULT_CELLS
     if args.cells:
         cells = tuple(tuple(c.split(":")) for c in args.cells.split(","))
-    print("arch     backend     req/s        p50       p99    offline  "
-          "speedup  parity  recompiles")
+    print("arch     backend   sampler    req/s        p50       p99    "
+          "offline  speedup  parity  recompiles")
     data = collect(cells, n_requests=args.requests)
     path = args.json or DEFAULT_JSON
     write_json(path, data)

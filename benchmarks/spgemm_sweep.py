@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.backend_sweep import timeit, write_json
+from benchmarks import roofline as rf
+from benchmarks.backend_sweep import _q8ify, timeit, write_json
 from repro.data.synthetic import powerlaw_graph
+from repro.sparse import quantize
 from repro.neurasim.model import stats_from_coo
 from repro.sparse import backend as sparse_backend
 from repro.sparse.graph import make_graph
@@ -81,24 +83,58 @@ def collect():
         records.append(_stat_record(n, e, plan, match, us_symbolic))
 
         ref = sparse_backend.spgemm(plan, backend="dense")
+        q8_bound = quantize.spgemm_q8_bound(
+            plan.width, plan.ell_out_block, plan.n_blocks,
+            plan.ell_a_scale, plan.slab_scale)
         for name in SPGEMM_BACKENDS:
             fn = jax.jit(lambda a, b, nm=name: sparse_backend.spgemm(
                 plan, a, b, backend=nm))
             a_dev = jnp.asarray(av)
             out = fn(a_dev, a_dev)
             dev = float(jnp.abs(ref - out).max()) if plan.nnz_out else 0.0
-            records.append({
+            rec = {
                 "kind": "spgemm", "backend": name, "n": n, "e": e,
                 "nnz_out": plan.nnz_out,
                 "us_per_call": round(timeit(fn, a_dev, a_dev), 1),
                 "max_abs_dev_vs_dense": dev,
-            })
+            }
+            if name == "pallas_q8":
+                # the traced values equal the baked ones, so the baked
+                # scales give the exact scale-derived bound for this cell
+                _q8ify(rec, q8_bound)
+            records.append(rec)
+        # baked-values cells — the Â²-style operating point: structure AND
+        # values frozen at plan time.  Here the q8 executor's architectural
+        # win shows: the f32 path re-scatters the hashed B slab every call,
+        # the quantized path ships the plan-time int8 slab directly.
+        for name in ("pallas", "pallas_q8"):
+            fn = jax.jit(lambda nm=name: sparse_backend.spgemm(
+                plan, backend=nm))
+            out = fn()
+            dev = float(jnp.abs(ref - out).max()) if plan.nnz_out else 0.0
+            rec = {
+                "kind": "spgemm_baked", "backend": name, "n": n, "e": e,
+                "nnz_out": plan.nnz_out,
+                "us_per_call": round(timeit(fn), 1),
+                "max_abs_dev_vs_dense": dev,
+            }
+            if name == "pallas_q8":
+                _q8ify(rec, q8_bound)
+            rec["roofline_frac"] = round(rf.spgemm_roofline_frac(
+                plan, rec["us_per_call"], q8=(name == "pallas_q8")), 4)
+            records.append(rec)
     dense = {(r["n"], r["e"]): r["us_per_call"] for r in records
              if r.get("backend") == "dense"}
+    f32 = {(r["kind"], r["n"], r["e"]): r["us_per_call"] for r in records
+           if r.get("backend") == "pallas"}
     for r in records:
         base = dense.get((r["n"], r["e"]))
         if r.get("backend") and base:
             r["speedup_vs_dense"] = round(base / r["us_per_call"], 3)
+        if r.get("backend") == "pallas_q8":
+            fb = f32.get((r["kind"], r["n"], r["e"]))
+            if fb:
+                r["speedup_vs_f32"] = round(fb / r["us_per_call"], 3)
 
     # the workload the engine opens: Â² precomputation, end to end
     n, e = SIZES[0]
@@ -117,12 +153,18 @@ def collect():
 
 
 def check_gate(records, tol=PARITY_TOL):
-    """→ offending records: parity above ``tol`` (NaN must fail) or a
-    measured-vs-analytic stats mismatch."""
-    bad = [r for r in records if r["kind"] == "spgemm"
-           and not (r["max_abs_dev_vs_dense"] <= tol)]
-    bad += [r for r in records if r["kind"] == "spgemm_stats"
-            and not r["stats_match"]]
+    """→ offending records: parity above ``tol`` (NaN must fail), a failed
+    quantized-parity invariant, or a measured-vs-analytic stats mismatch."""
+    bad = []
+    for r in records:
+        if r["kind"] in ("spgemm", "spgemm_baked"):
+            if "q8_parity_ok" in r:
+                if not r["q8_parity_ok"]:
+                    bad.append(r)
+            elif not (r["max_abs_dev_vs_dense"] <= tol):
+                bad.append(r)
+        elif r["kind"] == "spgemm_stats" and not r["stats_match"]:
+            bad.append(r)
     return bad
 
 

@@ -57,17 +57,20 @@ def records_of(data) -> List[dict]:
 
 
 def _is_ratio(name: str) -> bool:
-    return ("speedup" in name or "scaling" in name or name.endswith(
-        "hit_rate"))
+    # roofline_frac is achieved-over-bound on the SAME runner — a ratio by
+    # construction, so the 20% drift gate applies machine-independently
+    return ("speedup" in name or "scaling" in name
+            or "roofline_frac" in name or name.endswith("hit_rate"))
 
 
 def _is_parity(name: str) -> bool:
-    return "parity" in name or "dev" in name
+    return ("parity" in name or "dev" in name) and not name.endswith("_ok")
 
 
 def _is_invariant(name: str, value) -> bool:
     return isinstance(value, bool) and ("match" in name or "bitwise" in name
-                                        or name.startswith("ok"))
+                                        or name.startswith("ok")
+                                        or name.endswith("_ok"))
 
 
 def key_of(rec: dict) -> str:

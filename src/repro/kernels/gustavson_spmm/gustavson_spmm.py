@@ -217,6 +217,166 @@ def spmm_dedup_chunks(u_cols: jax.Array, remaining: jax.Array,
     return y[:, :d] if d_pad else y
 
 
+# ---------------------------------------------------------------------------
+# int8 quantized-tile mode (pallas_q8) — same dataflow, 4× fewer operand bytes
+# ---------------------------------------------------------------------------
+#
+# The coefficient tiles and the X operands move through HBM/DMA/VMEM as int8
+# (per-chunk scale for A, per-feature-tile scale for X — see
+# ``repro.sparse.quantize``).  The fold upcasts to f32 *inside* the MXU
+# matmul: int8 magnitudes ≤ 127 make every partial product and every chunk
+# sum (< 127·127·width < 2²⁴) exactly representable, so f32 accumulation is
+# bit-identical to an int32 accumulate.  Both scales are constant over one
+# grid step's contraction, so dequantization is a single scalar multiply of
+# the contribution at fold time — rescale-at-eviction, not per-element.
+
+
+def _fold_q8(a_ref, first_smem, ascale_smem, xscale_smem, y_ref, land, j, k):
+    contrib = jax.lax.dot(a_ref[...].astype(jnp.float32),
+                          land.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    contrib = contrib * (ascale_smem[k] * xscale_smem[j])
+    is_first = first_smem[k] != 0
+    y_ref[...] = jnp.where(is_first, contrib, y_ref[...] + contrib)
+
+
+def _kernel_dma_q8(u_cols_smem, rem_smem, ob_smem, first_smem, ascale_smem,
+                   xscale_smem, a_hbm, x_hbm, y_ref, a_ref, land_ref, sems, *,
+                   block_rows: int, group: int, d_tile: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    col0 = j * d_tile
+    a_cp = _start_a_tile(a_hbm, a_ref, sems.at[0], k, block_rows)
+    a_cp.start()
+    n_u = rem_smem[k]
+    n_waves = (n_u + group - 1) // group
+    land_ref[...] = jnp.zeros_like(land_ref)
+
+    def wave_copies(w):
+        return [pltpu.make_async_copy(
+                    x_hbm.at[u_cols_smem[k, w * group + t],
+                             pl.dslice(col0, d_tile)],
+                    land_ref.at[w * group + t], sems.at[1 + w * group + t])
+                for t in range(group)]
+
+    def start_wave(w, _):
+        for c in wave_copies(w):
+            c.start()
+        return 0
+
+    def wait_wave(w, _):
+        for c in wave_copies(w):
+            c.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n_waves, start_wave, 0)
+    jax.lax.fori_loop(0, n_waves, wait_wave, 0)
+    a_cp.wait()
+    _fold_q8(a_ref, first_smem, ascale_smem, xscale_smem, y_ref,
+             land_ref[...], j, k)
+
+
+def _kernel_stream_q8(u_cols_smem, rem_smem, ob_smem, first_smem, ascale_smem,
+                      xscale_smem, a_hbm, land_hbm, y_ref, a_ref, land_ref,
+                      sems, *, block_rows: int, width: int, d_tile: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    a_cp = _start_a_tile(a_hbm, a_ref, sems.at[0], k, block_rows)
+    a_cp.start()
+    land_cp = pltpu.make_async_copy(
+        land_hbm.at[pl.dslice(k * width, width),
+                    pl.dslice(j * d_tile, d_tile)], land_ref, sems.at[1])
+    land_cp.start()
+    a_cp.wait()
+    land_cp.wait()
+    _fold_q8(a_ref, first_smem, ascale_smem, xscale_smem, y_ref,
+             land_ref[...], j, k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "n_blocks",
+                                             "group", "d_tile", "gather",
+                                             "interpret"))
+def spmm_dedup_chunks_q8(u_cols: jax.Array, remaining: jax.Array,
+                         out_block: jax.Array, first: jax.Array,
+                         a_q8: jax.Array, a_scale: jax.Array,
+                         x_q8: jax.Array, x_scale: jax.Array, *,
+                         block_rows: int, n_blocks: int,
+                         group: int = DEFAULT_GROUP,
+                         d_tile: int | None = None, gather: str = "auto",
+                         interpret: bool = True) -> jax.Array:
+    """int8-operand Gustavson SpMM:  y ≈ A @ X, f32 output.
+
+    a_q8: (n_chunks·block_rows, width) int8 with a_scale (n_chunks,) f32;
+    x_q8: (N, D) int8 with x_scale (ceil(D/d_tile),) f32 — ``d_tile`` MUST
+    match the tile width the scales were computed with
+    (``quantize_feature_tiles(x, d_tile)``), else the rescale is wrong.
+    Output is always f32 (cross-chunk accumulation of rescaled folds).
+    """
+    n_chunks, width = u_cols.shape
+    d = x_q8.shape[1]
+    if gather == "auto":
+        gather = "dma" if jax.default_backend() == "tpu" else "stream"
+    if d_tile is None:
+        d_tile = _auto_d_tile(d)
+    d_pad = (-d) % d_tile
+    if d_pad:
+        x_q8 = jnp.pad(x_q8, ((0, 0), (0, d_pad)))
+    d_tiles = (d + d_pad) // d_tile
+    if x_scale.shape[0] != d_tiles:
+        raise ValueError(
+            f"x_scale has {x_scale.shape[0]} tiles for d_tiles={d_tiles}; "
+            f"quantize with the same d_tile the kernel runs with")
+    if gather == "dma":
+        lane_pad = (-width) % group
+        if lane_pad:
+            u_cols = jnp.pad(u_cols, ((0, 0), (0, lane_pad)))
+            a_q8 = jnp.pad(a_q8, ((0, 0), (0, lane_pad)))
+            width += lane_pad
+
+    out_shape = jax.ShapeDtypeStruct((n_blocks * block_rows,
+                                      d_tiles * d_tile), jnp.float32)
+    out_spec = pl.BlockSpec((block_rows, d_tile),
+                            lambda j, k, uc, re, ob, fi, sa, sx: (ob[k], j))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    if gather == "dma":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            # u_cols, remaining, out_block, first, a_scale, x_scale
+            num_scalar_prefetch=6,
+            grid=(d_tiles, n_chunks),
+            in_specs=[any_spec, any_spec],           # a_q8, x_q8 (HBM)
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((block_rows, width), jnp.int8),   # coeff tile
+                pltpu.VMEM((width, d_tile), jnp.int8),       # landing buffer
+                pltpu.SemaphoreType.DMA((1 + width,)),
+            ],
+        )
+        kernel = functools.partial(_kernel_dma_q8, block_rows=block_rows,
+                                   group=group, d_tile=d_tile)
+        operand = x_q8
+    else:
+        operand = jnp.take(x_q8, u_cols.reshape(-1), axis=0)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=(d_tiles, n_chunks),
+            in_specs=[any_spec, any_spec],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((block_rows, width), jnp.int8),
+                pltpu.VMEM((width, d_tile), jnp.int8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        kernel = functools.partial(_kernel_stream_q8, block_rows=block_rows,
+                                   width=width, d_tile=d_tile)
+    y = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                       interpret=interpret)(
+        u_cols, remaining, out_block, first,
+        a_scale.astype(jnp.float32), x_scale.astype(jnp.float32),
+        a_q8, operand)
+    return y[:, :d] if d_pad else y
+
+
 def spmm_blocked_ell(cols, row_local, vals, remaining, x,
                      block_rows: int = 8, interpret: bool = True,
                      group: int = DEFAULT_GROUP, d_tile: int | None = None,

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gustavson_spmm.gustavson_spmm import spmm_dedup_chunks
+from repro.kernels.gustavson_spmm.gustavson_spmm import (
+    _auto_d_tile, spmm_dedup_chunks, spmm_dedup_chunks_q8)
 
 
 def is_tpu() -> bool:
@@ -95,6 +96,82 @@ def spmm_dedup_grad(u_cols, remaining, out_block, first, a,
     return _spmm_dedup_ad(statics, u_cols, remaining, out_block, first, a,
                           t_u_cols, t_remaining, t_out_block, t_first, a_t,
                           x)
+
+
+# ---------------------------------------------------------------------------
+# pallas_q8: straight-through custom VJP — int8 forward, f32 backward
+# ---------------------------------------------------------------------------
+#
+# The forward pass runs the int8-operand kernel (quantizing X per feature
+# tile in-trace; the coefficient tiles arrive pre-quantized or are quantized
+# here from the f32 tiles).  The backward pass is the straight-through
+# estimator: the f32 machinery of ``_ad_bwd`` unchanged — dX through the f32
+# transpose-layout kernel, dA from the f32 operand gather — so only the
+# incoming cotangent (which saw the quantized forward value) carries
+# quantization error, never the gradient operators themselves.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmm_dedup_q8_ad(statics, u_cols, remaining, out_block, first, a,
+                      a_q8, a_scale, t_u_cols, t_remaining, t_out_block,
+                      t_first, a_t, x):
+    block_rows, n_blocks, _, group, d_tile, gather, interpret = statics
+    from repro.sparse.quantize import quantize_feature_tiles
+    dt = d_tile if d_tile is not None else _auto_d_tile(x.shape[1])
+    x_q8, x_scale = quantize_feature_tiles(x, dt)
+    y = spmm_dedup_chunks_q8(u_cols, remaining, out_block, first, a_q8,
+                             a_scale, x_q8, x_scale, block_rows=block_rows,
+                             n_blocks=n_blocks, group=group, d_tile=dt,
+                             gather=gather, interpret=interpret)
+    return y.astype(x.dtype)
+
+
+def _q8_ad_fwd(statics, u_cols, remaining, out_block, first, a, a_q8,
+               a_scale, t_u_cols, t_remaining, t_out_block, t_first, a_t, x):
+    y = _spmm_dedup_q8_ad(statics, u_cols, remaining, out_block, first, a,
+                          a_q8, a_scale, t_u_cols, t_remaining, t_out_block,
+                          t_first, a_t, x)
+    return y, (u_cols, remaining, out_block, first,
+               t_u_cols, t_remaining, t_out_block, t_first, a_t, x,
+               a_q8, a_scale)
+
+
+def _q8_ad_bwd(statics, res, dy):
+    (u_cols, remaining, out_block, first,
+     t_u_cols, t_remaining, t_out_block, t_first, a_t, x,
+     a_q8, a_scale) = res
+    grads = _ad_bwd(statics, (u_cols, remaining, out_block, first,
+                              t_u_cols, t_remaining, t_out_block, t_first,
+                              a_t, x), dy)
+    (d_uc, d_rem, d_ob, d_first, da,
+     d_tuc, d_trem, d_tob, d_tfirst, da_t, dx) = grads
+    return (d_uc, d_rem, d_ob, d_first, da,
+            _float0_zeros(a_q8), jnp.zeros_like(a_scale),
+            d_tuc, d_trem, d_tob, d_tfirst, da_t, dx)
+
+
+_spmm_dedup_q8_ad.defvjp(_q8_ad_fwd, _q8_ad_bwd)
+
+
+def spmm_dedup_grad_q8(u_cols, remaining, out_block, first, a,
+                       t_u_cols, t_remaining, t_out_block, t_first, a_t,
+                       x, *, a_q8=None, a_scale=None, block_rows: int,
+                       n_blocks: int, n_t_blocks: int, group: int = 8,
+                       d_tile=None, gather: str = "auto", interpret=None):
+    """Differentiable int8-operand SpMM (straight-through gradients).
+
+    ``a_q8``/``a_scale`` may be baked plan-time tiles; when ``None`` the f32
+    tiles ``a`` are quantized per chunk in-trace (for traced edge values).
+    """
+    if interpret is None:
+        interpret = not is_tpu()
+    if a_q8 is None:
+        from repro.sparse.quantize import quantize_chunk_tiles
+        a_q8, a_scale = quantize_chunk_tiles(a, u_cols.shape[0])
+    statics = (block_rows, n_blocks, n_t_blocks, group, d_tile, gather,
+               bool(interpret))
+    return _spmm_dedup_q8_ad(statics, u_cols, remaining, out_block, first,
+                             a, a_q8, a_scale, t_u_cols, t_remaining,
+                             t_out_block, t_first, a_t, x)
 
 
 def spmm(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, x,

@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.spgemm_pad.ref import spgemm_hashpad_ref
-from repro.kernels.spgemm_pad.spgemm_pad import spgemm_hashpad
+from repro.kernels.spgemm_pad.spgemm_pad import (spgemm_hashpad,
+                                                 spgemm_hashpad_q8)
 
 
 def is_tpu() -> bool:
@@ -32,3 +33,16 @@ def hashpad_accumulate(out_block, first, evict, a, slab, *, block_rows: int,
                           block_rows=block_rows, n_blocks=n_blocks,
                           pad_width=pad_width, h_tile=h_tile,
                           interpret=bool(interpret))
+
+
+def hashpad_accumulate_q8(out_block, first, evict, a_q8, a_scale, slab_q8,
+                          slab_scale, *, block_rows: int, n_blocks: int,
+                          pad_width: int, h_tile: int | None = None,
+                          interpret=None) -> jax.Array:
+    """int8-operand hash-pad accumulation (pallas_q8 SpGEMM executor)."""
+    if interpret is None:
+        interpret = not is_tpu()
+    return spgemm_hashpad_q8(out_block, first, evict, a_q8, a_scale,
+                             slab_q8, slab_scale, block_rows=block_rows,
+                             n_blocks=n_blocks, pad_width=pad_width,
+                             h_tile=h_tile, interpret=bool(interpret))

@@ -122,3 +122,88 @@ def spgemm_hashpad(out_block: jax.Array, first: jax.Array, evict: jax.Array,
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(out_block, first, evict, a,
                                                slab)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized-tile mode (pallas_q8) — same hash-pad dataflow, int8 DMA
+# ---------------------------------------------------------------------------
+#
+# Both operands of chunk k — its coefficient tile AND its slab rows — carry
+# one per-chunk symmetric scale (``repro.sparse.quantize``), so the whole
+# MXU fold rescales with a single scalar multiply before accumulating into
+# the f32 pad.  int8 magnitudes ≤ 127 keep every chunk sum < 2²⁴, so the f32
+# accumulation inside the dot is exact; HBM → VMEM traffic is ¼ of f32.
+
+
+def _kernel_q8(ob_smem, first_smem, evict_smem, ascale_smem, bscale_smem,
+               a_hbm, slab_hbm, y_ref, a_ref, land_ref, pad_ref, sems, *,
+               block_rows: int, width: int, h_tile: int):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    a_cp = pltpu.make_async_copy(
+        a_hbm.at[pl.dslice(k * block_rows, block_rows), :], a_ref,
+        sems.at[0])
+    a_cp.start()
+    land_cp = pltpu.make_async_copy(
+        slab_hbm.at[pl.dslice(k * width, width),
+                    pl.dslice(j * h_tile, h_tile)], land_ref, sems.at[1])
+    land_cp.start()
+    a_cp.wait()
+    land_cp.wait()
+    contrib = jax.lax.dot(a_ref[...].astype(jnp.float32),
+                          land_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    contrib = contrib * (ascale_smem[k] * bscale_smem[k])
+    is_first = first_smem[k] != 0
+    pad_ref[...] = jnp.where(is_first, contrib, pad_ref[...] + contrib)
+
+    @pl.when(evict_smem[k] != 0)
+    def _evict():
+        y_ref[...] = pad_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "n_blocks",
+                                             "pad_width", "h_tile",
+                                             "interpret"))
+def spgemm_hashpad_q8(out_block: jax.Array, first: jax.Array,
+                      evict: jax.Array, a_q8: jax.Array, a_scale: jax.Array,
+                      slab_q8: jax.Array, slab_scale: jax.Array, *,
+                      block_rows: int, n_blocks: int, pad_width: int,
+                      h_tile: int | None = None,
+                      interpret: bool = True) -> jax.Array:
+    """int8-operand hash-pad SpGEMM: C_pad ≈ fold(A_tiles @ slab), f32 out.
+
+    a_q8: (n_chunks·block_rows, width) int8 with a_scale (n_chunks,) f32;
+    slab_q8: (n_chunks·width, pad_width) int8 with slab_scale (n_chunks,)
+    f32 — both scales per dedup chunk, rescaled at the pad accumulate.
+    """
+    n_chunks = out_block.shape[0]
+    width = slab_q8.shape[0] // n_chunks
+    if h_tile is None:
+        h_tile = _auto_h_tile(pad_width)
+    if pad_width % h_tile:
+        raise ValueError(f"h_tile {h_tile} must divide pad_width {pad_width}")
+    h_tiles = pad_width // h_tile
+    out_shape = jax.ShapeDtypeStruct((n_blocks * block_rows, pad_width),
+                                     jnp.float32)
+    out_spec = pl.BlockSpec((block_rows, h_tile),
+                            lambda j, k, ob, fi, ev, sa, sb: (ob[k], j))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,   # out_block, first, evict, a_scale, b_scale
+        grid=(h_tiles, n_chunks),
+        in_specs=[any_spec, any_spec],  # a_q8, slab_q8 (HBM)
+        out_specs=out_spec,
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, width), jnp.int8),      # coeff tile
+            pltpu.VMEM((width, h_tile), jnp.int8),          # landing slab
+            pltpu.VMEM((block_rows, h_tile), jnp.float32),  # hash pad
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(_kernel_q8, block_rows=block_rows,
+                               width=width, h_tile=h_tile)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        out_block, first, evict, a_scale.astype(jnp.float32),
+        slab_scale.astype(jnp.float32), a_q8, slab_q8)

@@ -63,7 +63,7 @@ def resolve_gnn_plan(graph, backend: str, two_hop: bool = False,
     if two_hop:
         from repro.sparse.spgemm import cached_two_hop_graph
         graph = cached_two_hop_graph(graph)
-    host = backend in ("pallas", "distributed")
+    host = backend in ("pallas", "pallas_q8", "distributed")
     if not (host or two_hop):
         return None
     from repro.sparse.plan import cached_plan_from_graph

@@ -27,7 +27,11 @@ def quantize_int8(x: Array, block: int = 256) -> Tuple[Array, Array]:
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
     scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
+    # all-zero blocks: an explicit scale of 1.0 (not an epsilon floor) keeps
+    # round(0 / scale) exact and the dequantized block exactly zero — an
+    # epsilon floor turns later scale arithmetic (ratios, logs, reciprocals
+    # in telemetry) into inf/NaN factories
+    scale = jnp.where(scale == 0, 1.0, scale)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 

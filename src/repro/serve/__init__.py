@@ -23,6 +23,8 @@ from repro.serve.cluster import (ClusterServer, DRHMRouter,
                                  utilization_spread)
 from repro.serve.compute import (FeatureStore, StepCache, build_infer_step,
                                  build_lane_infer_step)
+from repro.serve.device_sampler import (DeviceSamplerPlane,
+                                        sample_forest_device, tree_key_mix)
 from repro.serve.engine import (GNNServer, SamplerPool, offline_inference,
                                 offline_replay)
 from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
@@ -32,6 +34,7 @@ __all__ = [
     "BucketStructure", "bucket_for", "build_bucket_structure", "stack_trees",
     "ClusterServer", "DRHMRouter", "utilization_spread",
     "FeatureStore", "StepCache", "build_infer_step", "build_lane_infer_step",
+    "DeviceSamplerPlane", "sample_forest_device", "tree_key_mix",
     "GNNServer", "SamplerPool", "offline_inference", "offline_replay",
     "LaneSlotPools", "SlotPool", "pack_fifo",
 ]

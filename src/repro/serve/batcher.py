@@ -37,6 +37,8 @@ class ServeRequest:
     t_ready: float = 0.0              # sampling finished, joined the queue
     t_done: float = 0.0               # result materialized
     trees: Optional[list] = None      # per-seed SampledSubgraph (data plane)
+    tkm: Optional[tuple] = None       # per-seed (hi, lo) uint32 counter
+    #                                   terms — device-sampling data plane
     result: Optional[np.ndarray] = None  # (k, d_out) seed outputs
     error: Optional[BaseException] = None  # pipeline failure, re-raised
     _event: threading.Event = dataclasses.field(

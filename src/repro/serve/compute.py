@@ -124,8 +124,8 @@ def _build_bucket_plan(key: tuple):
     n_seeds, fanouts, with_loops, backend, need_ell = key
     struct = build_bucket_structure(n_seeds, fanouts, with_loops=with_loops)
     backends = ["dense", "chunked"]
-    if backend == "pallas" and need_ell:
-        backends.append("pallas")
+    if backend in ("pallas", "pallas_q8") and need_ell:
+        backends.append(backend)
     if backend == "distributed":
         backends.append("distributed")
     return make_plan(struct.senders, struct.receivers, struct.n_nodes,

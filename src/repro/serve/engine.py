@@ -5,7 +5,12 @@
 
 1. ``submit(seeds)`` hands the request to sampler **worker threads** — one
    fanout tree per seed (``sparse.sampler``), per-request deterministic rng
-   so offline replay sees identical subgraphs;
+   so offline replay sees identical subgraphs.  Under ``sampler="device"``
+   there are no workers at all: the request carries only its seeds and two
+   uint32 counter terms per tree, joins the batcher immediately, and the
+   fanout sampling runs *inside the dispatched bucket step* on device
+   (``serve.device_sampler`` — draw-for-draw equal to the host sampler, so
+   the offline-replay parity anchor is unchanged);
 2. sampled requests join the ``DynamicBatcher`` (deadline/size triggers);
 3. the engine thread stacks a batch's trees into the request-count bucket
    (``bucket_for`` → power of two, bounded jit-cache key space), fetches the
@@ -172,6 +177,7 @@ class GNNServer:
     def __init__(self, arch_id: str, cfg, params, indptr: np.ndarray,
                  indices: np.ndarray, store: FeatureStore, *,
                  fanouts: Sequence[int] = (5, 3), backend: str = "dense",
+                 sampler: str = "host",
                  max_batch_seeds: int = 16, max_wait_ms: float = 5.0,
                  n_workers: int = 2, seed: int = 0,
                  step_cache_size: int = 16, inflight: int = 2,
@@ -207,11 +213,25 @@ class GNNServer:
         self.latencies: "collections.deque[float]" = collections.deque(
             maxlen=4096)
 
-        # data plane: shared sampler worker pool
-        self._sampler = SamplerPool(self.indptr, self.indices, self.fanouts,
-                                    seed, on_ready=self.batcher.submit,
-                                    on_error=self._fail_requests,
-                                    n_workers=n_workers)
+        # data plane: host sampler worker pool, or the device plane — where
+        # sampling runs INSIDE the per-bucket jitted step (seeds + counter
+        # keys in, no host node tables at all; serve.device_sampler)
+        if sampler not in ("host", "device"):
+            raise ValueError(f"sampler must be 'host' or 'device', "
+                             f"got {sampler!r}")
+        self.sampler_mode = sampler
+        if sampler == "device":
+            from repro.serve.device_sampler import DeviceSamplerPlane
+            self._sampler = None
+            self._plane = DeviceSamplerPlane(self.indptr, self.indices,
+                                             self.fanouts, key=seed)
+        else:
+            self._plane = None
+            self._sampler = SamplerPool(self.indptr, self.indices,
+                                        self.fanouts, seed,
+                                        on_ready=self.batcher.submit,
+                                        on_error=self._fail_requests,
+                                        n_workers=n_workers)
         # compute plane: engine loop + in-flight double buffer
         self._closing = False
         self._stop = threading.Event()
@@ -241,7 +261,16 @@ class GNNServer:
             self._next_rid += 1
             req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
             self.requests[rid] = req
-        self._sampler.submit(req)
+        if self._plane is not None:
+            # device sampling: the host's whole data-plane job is two uint32
+            # per seed (the tree-key counter term); the request joins the
+            # batcher immediately — there is no sampling queue to wait in
+            from repro.serve.device_sampler import tree_key_mix
+            req.tkm = tree_key_mix(default_tree_keys(rid, seeds.shape[0]))
+            req.t_ready = self.clock()
+            self.batcher.submit(req)
+        else:
+            self._sampler.submit(req)
         return req
 
     # -- data plane ---------------------------------------------------------
@@ -254,15 +283,42 @@ class GNNServer:
             req.fail(exc, now)
 
     def sample_for(self, seeds, rid: int) -> list:
-        """The data plane's sampling, re-runnable offline (parity anchor)."""
-        return self._sampler.sample_for(seeds, rid)
+        """The data plane's sampling, re-runnable offline (parity anchor).
+
+        Deliberately always the HOST sampler, even in device mode: the
+        bit-exact counter-hash emulation makes the device draws identical,
+        so host replay is the independent oracle the parity gate compares
+        device-sampled serving against.
+        """
+        if self._sampler is not None:
+            return self._sampler.sample_for(seeds, rid)
+        seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+        return sampler.sample_forest(self.indptr, self.indices, seeds,
+                                     self.fanouts, key=self.seed,
+                                     tree_keys=default_tree_keys(
+                                         rid, seeds.shape[0]))
 
     # -- compute plane ------------------------------------------------------
     def _build_step(self, key: tuple):
         (bucket,) = key
         struct = self._struct(bucket)
-        return build_infer_step(self.arch_id, self.cfg, self.store, struct,
-                                backend=self.backend)
+        if self._plane is None:
+            return build_infer_step(self.arch_id, self.cfg, self.store,
+                                    struct, backend=self.backend)
+        # fused dispatch: sampling + feature gather + GNN forward in ONE
+        # jitted program per bucket — the step's traced inputs shrink from
+        # the stacked node tables to seeds + per-tree counter keys
+        import jax
+        body = build_infer_step(self.arch_id, self.cfg, self.store, struct,
+                                backend=self.backend, jit=False)
+        plane = self._plane
+
+        def fused(params, seeds, tk_hi, tk_lo, live):
+            node_ids, hop_valid = plane.sample_bucket(seeds, tk_hi, tk_lo,
+                                                      live)
+            return body(params, node_ids, hop_valid)
+
+        return jax.jit(fused)
 
     def _struct(self, bucket: int):
         if bucket not in self._structs:
@@ -270,13 +326,33 @@ class GNNServer:
                 bucket, self.fanouts, with_loops=_needs_loops(self.arch_id))
         return self._structs[bucket]
 
+    def _device_batch(self, batch: List[ServeRequest], bucket: int):
+        """Pack a batch's seeds + counter terms into the bucket's lanes
+        (padding lanes: live=False ⇒ the traced sampler blanks them)."""
+        seeds = np.zeros(bucket, np.int32)
+        tk_hi = np.zeros(bucket, np.uint32)
+        tk_lo = np.zeros(bucket, np.uint32)
+        live = np.zeros(bucket, bool)
+        i = 0
+        for r in batch:
+            k = r.n_seeds
+            seeds[i:i + k] = r.seeds
+            tk_hi[i:i + k], tk_lo[i:i + k] = r.tkm
+            live[i:i + k] = True
+            i += k
+        return seeds, tk_hi, tk_lo, live
+
     def _dispatch(self, batch: List[ServeRequest]):
-        trees = [t for r in batch for t in r.trees]
-        bucket = bucket_for(len(trees), self.max_batch_seeds)
+        n_trees = sum(r.n_seeds for r in batch)
+        bucket = bucket_for(n_trees, self.max_batch_seeds)
         warm = self.steps.builds
         step = self.steps.get((bucket,))
-        node_ids, hop_valid = stack_trees(trees, bucket, self.fanouts)
-        out = step(self.params, node_ids, hop_valid)   # async dispatch
+        if self._plane is None:
+            trees = [t for r in batch for t in r.trees]
+            node_ids, hop_valid = stack_trees(trees, bucket, self.fanouts)
+            out = step(self.params, node_ids, hop_valid)   # async dispatch
+        else:
+            out = step(self.params, *self._device_batch(batch, bucket))
         with self._stats_lock:
             self.bucket_counts[bucket] += 1
             self.bucket_hits += int(self.steps.builds == warm)
@@ -329,6 +405,11 @@ class GNNServer:
                    else buckets)
         for b in buckets:
             step = self.steps.get((b,))
+            if self._plane is not None:
+                np.asarray(step(self.params, np.zeros(b, np.int32),
+                                np.zeros(b, np.uint32),
+                                np.zeros(b, np.uint32), np.zeros(b, bool)))
+                continue
             struct = self._struct(b)
             node_ids = np.full(struct.n_nodes, -1, np.int64)
             hop_valid = np.zeros(struct.n_hop_edges, bool)
@@ -374,7 +455,8 @@ class GNNServer:
         if self._closing:
             return
         self._closing = True              # reject new submissions from here
-        self._sampler.close()             # every accepted request is sampled
+        if self._sampler is not None:
+            self._sampler.close()         # every accepted request is sampled
         self._stop.set()
         self._engine.join()               # exits within one poll interval
 
@@ -388,10 +470,21 @@ class GNNServer:
 def offline_inference(server: GNNServer, trees: list) -> np.ndarray:
     """One-request-at-a-time reference: each tree through the bucket-1 step.
 
-    Uses the server's own step cache (bucket 1), so it measures exactly the
+    Uses the server's bucket-1 host-input step, so it measures exactly the
     unbatched serving path; returns the stacked (n_trees, d_out) outputs.
+    Under device sampling the cached steps take (seeds, keys) instead of
+    node tables, so the reference builds its own host-input bucket-1 step —
+    which keeps it an INDEPENDENT program from the fused one it anchors.
     """
-    step = server.steps.get((1,))
+    if server._plane is None:
+        step = server.steps.get((1,))
+    else:
+        step = getattr(server, "_host_step1", None)
+        if step is None:
+            step = build_infer_step(server.arch_id, server.cfg, server.store,
+                                    server._struct(1),
+                                    backend=server.backend)
+            server._host_step1 = step
     out = []
     for tree in trees:
         node_ids, hop_valid = stack_trees([tree], 1, server.fanouts)

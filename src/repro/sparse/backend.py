@@ -57,7 +57,7 @@ __all__ = ["Backend", "BACKENDS", "ALL_BACKENDS", "BackendPlanError",
            "SpgemmBackend", "SPGEMM_BACKENDS", "ALL_SPGEMM_BACKENDS",
            "register_spgemm_backend", "get_spgemm_backend", "spgemm"]
 
-ALL_SPGEMM_BACKENDS = ("dense", "reference", "pallas")
+ALL_SPGEMM_BACKENDS = ("dense", "reference", "pallas", "pallas_q8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,12 +87,16 @@ def get_backend(name: str) -> Backend:
 
 def aggregate(plan: AggregationPlan, vals: Optional[Array], x: Array,
               backend: str = "dense") -> Array:
-    """y[r] = Σ_{e: rows[e]=r} vals[e] · x[cols[e]] on the named executor."""
-    if x.shape[0] != plan.n_rows:
+    """y[r] = Σ_{e: rows[e]=r} vals[e] · x[cols[e]] on the named executor.
+
+    ``x`` may be a ``sparse.quantize.QuantizedFeatures`` (resident int8
+    rows) on the ``pallas_q8`` executor — the inference fast path."""
+    n_x = x.q8.shape[0] if hasattr(x, "q8") else x.shape[0]
+    if n_x != plan.n_rows:
         # JAX gathers clip out-of-bounds indices, so a mismatched plan would
         # return silently-wrong values instead of erroring — catch it here.
         raise ValueError(
-            f"x has {x.shape[0]} rows but the plan was built for "
+            f"x has {n_x} rows but the plan was built for "
             f"n_rows={plan.n_rows} (padded node count incl. ghost row)")
     return get_backend(backend).aggregate(plan, vals, x)
 
@@ -250,6 +254,62 @@ def _pallas_accumulate(plan, messages):
 
 
 register_backend(Backend("pallas", _pallas_aggregate, _pallas_accumulate))
+
+
+# ---------------------------------------------------------------------------
+# pallas_q8 — int8 quantized-tile Gustavson kernel (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _pallas_q8_aggregate(plan, vals, x):
+    from repro.kernels.gustavson_spmm import ops as gops
+    from repro.kernels.gustavson_spmm.gustavson_spmm import (
+        _auto_d_tile, spmm_dedup_chunks_q8)
+    from repro.sparse.quantize import QuantizedFeatures, quantize_chunk_tiles
+    plan.require("ell", "pallas_q8")
+    a_q8 = a_scale = None
+    if vals is None:
+        a, a_t = plan.ell_a, plan.ell_t_a
+        # plan-time baked int8 tiles when the plan carries them; otherwise
+        # (plan built for `pallas` only) quantize the f32 tiles in-trace
+        a_q8, a_scale = plan.ell_a_q8, plan.ell_a_scale
+    else:
+        a = _coeff_tiles(plan, vals, plan.ell_a, plan.ell_slots)
+        a_t = _coeff_tiles(plan, vals, plan.ell_t_a, plan.ell_t_slots)
+    if a_q8 is None:
+        a_q8, a_scale = quantize_chunk_tiles(a, plan.ell_u_cols.shape[0])
+    if isinstance(x, QuantizedFeatures):
+        # resident fast path: features were quantized once at store time —
+        # inference-only (no VJP; there is no f32 X to differentiate)
+        dt = plan.ell_d_tile or _auto_d_tile(x.q8.shape[1])
+        d_tiles = -(-x.q8.shape[1] // dt)
+        if x.scale.shape[0] != d_tiles:
+            raise ValueError(
+                f"QuantizedFeatures carries {x.scale.shape[0]} feature-tile "
+                f"scales but the plan's kernel uses d_tile={dt} "
+                f"({d_tiles} tiles) — re-quantize with the plan's d_tile")
+        y = spmm_dedup_chunks_q8(
+            plan.ell_u_cols, plan.ell_remaining, plan.ell_out_block,
+            plan.ell_first, a_q8, a_scale, x.q8, x.scale,
+            block_rows=plan.block_rows, n_blocks=plan.n_blocks,
+            group=plan.ell_group, d_tile=plan.ell_d_tile,
+            interpret=not gops.is_tpu())
+        return y[: plan.n_rows]
+    # X quantizes per feature tile inside the op (the scales must be computed
+    # with the kernel's own d_tile); output returns in x.dtype
+    y = gops.spmm_dedup_grad_q8(
+        plan.ell_u_cols, plan.ell_remaining, plan.ell_out_block,
+        plan.ell_first, a,
+        plan.ell_t_u_cols, plan.ell_t_remaining, plan.ell_t_out_block,
+        plan.ell_t_first, a_t, x,
+        a_q8=a_q8, a_scale=a_scale,
+        block_rows=plan.block_rows, n_blocks=plan.n_blocks,
+        n_t_blocks=plan.n_t_blocks, group=plan.ell_group,
+        d_tile=plan.ell_d_tile)
+    return y[: plan.n_rows]
+
+
+register_backend(Backend("pallas_q8", _pallas_q8_aggregate,
+                         _pallas_accumulate))
 
 
 # ---------------------------------------------------------------------------

@@ -44,7 +44,7 @@ import numpy as np
 
 Array = jax.Array
 
-ALL_BACKENDS = ("dense", "chunked", "pallas", "distributed")
+ALL_BACKENDS = ("dense", "chunked", "pallas", "pallas_q8", "distributed")
 
 
 class BackendPlanError(ValueError):
@@ -88,6 +88,12 @@ class AggregationPlan:
     ell_t_first: Optional[Array] = None
     ell_t_a: Optional[Array] = None
     ell_t_slots: Optional[Array] = None
+    # int8 quantized coefficient tiles (`pallas_q8`): per-dedup-chunk
+    # symmetric scales, baked plan-time from the f32 tiles (DESIGN.md §12).
+    # Only the forward tiles are quantized — the straight-through backward
+    # runs the f32 transpose layout
+    ell_a_q8: Optional[Array] = None       # (n_chunks·block_rows, width) int8
+    ell_a_scale: Optional[Array] = None    # (n_chunks,) f32
 
     # --- DRHM shard section (`distributed`) ---
     dist_rows_local: Optional[Array] = None  # (S*e_per,) int32
@@ -122,6 +128,7 @@ _LEAF_FIELDS = (
     "ell_slots",
     "ell_t_u_cols", "ell_t_remaining", "ell_t_out_block", "ell_t_first",
     "ell_t_a", "ell_t_slots",
+    "ell_a_q8", "ell_a_scale",
     "dist_rows_local", "dist_cols_perm", "dist_vals", "dist_slots",
     "dist_perm", "dist_inv_perm",
 )
@@ -200,7 +207,7 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
               rows=jnp.asarray(r), cols=jnp.asarray(s),
               valid=jnp.asarray(valid), base_vals=jnp.asarray(base))
 
-    if "pallas" in backends:
+    if "pallas" in backends or "pallas_q8" in backends:
         from repro.sparse.graph import pack_dedup_chunks
         pack_kw = dict(block_rows=block_rows, width_cap=width_cap,
                        width_multiple=width_multiple)
@@ -229,6 +236,13 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
                   ell_t_first=jnp.asarray(tr.first),
                   ell_t_a=jnp.asarray(tr.a),
                   ell_t_slots=jnp.asarray(t_slots))
+        if "pallas_q8" in backends:
+            # bake the int8 tiles for the default-values path; traced edge
+            # values re-quantize in-jit (plan_with_values / the backend)
+            from repro.sparse.quantize import quantize_chunk_tiles
+            a_q8, a_scale = quantize_chunk_tiles(kw["ell_a"],
+                                                 fwd.u_cols.shape[0])
+            kw.update(ell_a_q8=a_q8, ell_a_scale=a_scale)
 
     if "distributed" in backends:
         from repro.core.distributed import plan_distributed_spmm
@@ -285,6 +299,11 @@ def plan_with_values(plan: AggregationPlan,
             width = a_base.shape[1]
             kw[pre + "a"] = jnp.zeros_like(a_base).at[
                 slots // width, slots % width].add(base, mode="drop")
+        if plan.ell_a_q8 is not None:
+            from repro.sparse.quantize import quantize_chunk_tiles
+            a_q8, a_scale = quantize_chunk_tiles(
+                kw["ell_a"], plan.ell_u_cols.shape[0])
+            kw.update(ell_a_q8=a_q8, ell_a_scale=a_scale)
     if plan.dist_rows_local is not None:
         flat = jnp.zeros((plan.dist_rows_local.shape[0],), jnp.float32)
         kw["dist_vals"] = flat.at[plan.dist_slots].set(base, mode="drop")

@@ -120,9 +120,45 @@ def _pallas_spgemm(plan: SpgemmPlan, a_vals, b_vals) -> Array:
     return c_pad[plan.out_row, plan.out_bucket]
 
 
+# ---------------------------------------------------------------------------
+# pallas_q8 — int8 hash-pad kernel on the same layout (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _pallas_q8_spgemm(plan: SpgemmPlan, a_vals, b_vals) -> Array:
+    from repro.kernels.spgemm_pad import ops as pad_ops
+    from repro.sparse.quantize import quantize_chunk_tiles
+    _require_layout(plan, "ell_a", "pallas_q8")
+    if a_vals is None and plan.ell_a_q8 is not None:
+        a_q8, a_scale = plan.ell_a_q8, plan.ell_a_scale
+    else:
+        v = _a_vals(plan, a_vals)
+        w = plan.width
+        a_tiles = jnp.zeros_like(plan.ell_a).at[
+            plan.ell_slots // w, plan.ell_slots % w].add(v, mode="drop")
+        a_q8, a_scale = quantize_chunk_tiles(a_tiles, plan.n_chunks)
+    if b_vals is None and plan.slab_q8 is not None:
+        # the baked quantized slab: the default-values fast path pays no
+        # runtime scatter at all — the f32 executor rebuilds the slab every
+        # call even for baked values
+        slab_q8, slab_scale = plan.slab_q8, plan.slab_scale
+    else:
+        bv = _b_vals(plan, b_vals)
+        slab = jnp.zeros((plan.n_chunks * plan.width, plan.pad_width),
+                         jnp.float32).at[plan.slab_row, plan.slab_col].add(
+            bv[plan.slab_src], mode="drop")
+        slab_q8, slab_scale = quantize_chunk_tiles(slab, plan.n_chunks)
+    c_pad = pad_ops.hashpad_accumulate_q8(
+        plan.ell_out_block, plan.ell_first, plan.ell_evict,
+        a_q8, a_scale, slab_q8, slab_scale,
+        block_rows=plan.block_rows, n_blocks=plan.n_blocks,
+        pad_width=plan.pad_width)
+    return c_pad[plan.out_row, plan.out_bucket]
+
+
 register_spgemm_backend(SpgemmBackend("dense", _dense_spgemm))
 register_spgemm_backend(SpgemmBackend("reference", _reference_spgemm))
 register_spgemm_backend(SpgemmBackend("pallas", _pallas_spgemm))
+register_spgemm_backend(SpgemmBackend("pallas_q8", _pallas_q8_spgemm))
 
 
 # ---------------------------------------------------------------------------

@@ -343,6 +343,14 @@ class SpgemmPlan:
     out_bucket: Optional[Array] = None    # (nnz_out,) int32 into pad lanes
     gammas: Optional[Array] = None        # (n_blocks,) uint32 — per-block γ
 
+    # --- pallas_q8 executor: baked int8 tiles + quantized hashed slab -----
+    # (per-chunk symmetric scales; the default-values fast path skips the
+    # runtime slab scatter entirely — see numeric._pallas_q8_spgemm)
+    ell_a_q8: Optional[Array] = None      # (n_chunks·block_rows, width) int8
+    ell_a_scale: Optional[Array] = None   # (n_chunks,) f32
+    slab_q8: Optional[Array] = None       # (n_chunks·width, pad_width) int8
+    slab_scale: Optional[Array] = None    # (n_chunks,) f32
+
     @property
     def bloat_pct(self) -> float:
         return bloat_percent(self.pp_interim, self.nnz_out)
@@ -364,7 +372,7 @@ _SP_LEAF_FIELDS = (
     "c_indptr", "c_row", "c_col", "pp_a", "pp_b", "pp_slot",
     "ell_u_cols", "ell_a", "ell_out_block", "ell_first", "ell_evict",
     "ell_slots", "slab_row", "slab_col", "slab_src", "out_row", "out_bucket",
-    "gammas",
+    "gammas", "ell_a_q8", "ell_a_scale", "slab_q8", "slab_scale",
 )
 _SP_AUX_FIELDS = (
     "n_rows", "n_inner", "n_cols", "nnz_a", "nnz_b", "nnz_out",
@@ -395,7 +403,7 @@ def _i32(x) -> Array:
     return jnp.asarray(np.asarray(x, np.int32))
 
 
-ALL_SPGEMM_EXECUTORS = ("dense", "reference", "pallas")
+ALL_SPGEMM_EXECUTORS = ("dense", "reference", "pallas", "pallas_q8")
 
 
 def make_spgemm_plan(a_rows: np.ndarray, a_cols: np.ndarray, n_rows: int,
@@ -461,7 +469,7 @@ def make_spgemm_plan(a_rows: np.ndarray, a_cols: np.ndarray, n_rows: int,
         kw.update(n_waves=int(n_waves), pp_a=_i32(pp_a), pp_b=_i32(pp_b),
                   pp_slot=_i32(pp_slot))
 
-    if "pallas" in executors:
+    if "pallas" in executors or "pallas_q8" in executors:
         # --- A coefficient tiles (PR-2 packer) ----------------------------
         from repro.sparse.graph import pack_dedup_chunks
         ch = pack_dedup_chunks(a_rows, a_cols, av, int(n_rows),
@@ -522,5 +530,19 @@ def make_spgemm_plan(a_rows: np.ndarray, a_cols: np.ndarray, n_rows: int,
             slab_src=_i32(slab_src),
             out_row=_i32(sym.c_row), out_bucket=_i32(out_bucket),
             gammas=jnp.asarray(gammas))
+
+        if "pallas_q8" in executors:
+            # bake the int8 layouts for the default-values path: quantized
+            # A tiles AND the fully-materialized quantized slab — the q8
+            # executor then skips the runtime slab scatter the f32 path
+            # pays every call (structure is plan state, values are data)
+            from repro.sparse.quantize import quantize_chunk_tiles
+            a_q8, a_scale = quantize_chunk_tiles(kw["ell_a"], int(n_chunks))
+            slab_f32 = np.zeros((n_chunks * width, pad_width), np.float32)
+            np.add.at(slab_f32, (slab_row, slab_col), bv[slab_src])
+            slab_q8, slab_scale = quantize_chunk_tiles(
+                jnp.asarray(slab_f32), int(n_chunks))
+            kw.update(ell_a_q8=a_q8, ell_a_scale=a_scale,
+                      slab_q8=slab_q8, slab_scale=slab_scale)
 
     return SpgemmPlan(**kw)

@@ -103,3 +103,35 @@ def test_trajectory_is_bounded(tmp_path):
     trajectory.main(["--append", str(p)])
     data = json.loads(p.read_text())
     assert len(data["trajectory"]) == trajectory.MAX_TRAJECTORY
+
+
+def test_roofline_frac_is_a_gated_ratio():
+    base = [rec(roofline_frac=0.50)]
+    # small wobble passes, >20% drop fails, improvement is always fine
+    assert trajectory.compare(base, [rec(roofline_frac=0.45)]) == []
+    assert trajectory.compare(base, [rec(roofline_frac=0.80)]) == []
+    fails = trajectory.compare(base, [rec(roofline_frac=0.35)])
+    assert len(fails) == 1 and "roofline_frac" in fails[0]
+
+
+def test_q8_parity_ok_is_a_gated_invariant():
+    base = [rec(q8_parity_ok=True, q8_err_abs=0.01, q8_bound=0.6)]
+    assert trajectory.compare(base, [rec(q8_parity_ok=True, q8_err_abs=0.02,
+                                         q8_bound=0.6)]) == []
+    fails = trajectory.compare(base, [rec(q8_parity_ok=False,
+                                          q8_err_abs=0.9, q8_bound=0.6)])
+    assert len(fails) == 1 and "q8_parity_ok" in fails[0]
+
+
+def test_q8_err_abs_is_recorded_not_gated():
+    # the raw quantization error may move with data; only the _ok invariant
+    # and the scale-derived bound police it
+    base = [rec(q8_parity_ok=True, q8_err_abs=0.001)]
+    assert trajectory.compare(base, [rec(q8_parity_ok=True,
+                                         q8_err_abs=0.04)]) == []
+
+
+def test_sampler_field_separates_serving_cells():
+    host = rec(sampler="host")
+    dev = rec(sampler="device")
+    assert trajectory.key_of(host) != trajectory.key_of(dev)

@@ -64,24 +64,36 @@ def build_world(arch: str, n_nodes: int, n_edges: int, d_in: int,
 
 
 def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
-    """The scale-out path: N replica lanes, DRHM-routed (DESIGN.md §11)."""
+    """The scale-out path: N replica lanes, DRHM-routed (DESIGN.md §11),
+    under the fault-tolerant control plane (DESIGN.md §13)."""
     rng = np.random.default_rng(args.seed + 2)
     traces = [rng.integers(0, args.nodes, max(args.seeds_per_request, 1))
               for _ in range(args.requests)]
     mode = "sharded" if args.shard else "replicated"
+    chaos = None
+    if args.chaos_kill_lane is not None:
+        from repro.serve import ChaosInjector, LaneFault
+        chaos = ChaosInjector(seed=args.seed, lane_faults=[
+            LaneFault(lane=args.chaos_kill_lane, at_round=args.chaos_round)])
     server = ClusterServer(args.arch, cfg, params, indptr, indices, store,
                            n_lanes=args.replicas, mode=mode,
                            placement=args.placement, fanouts=fanouts,
                            backend=args.backend,
                            max_batch_seeds=args.max_batch,
                            max_wait_ms=args.max_wait_ms,
-                           n_workers=args.workers, seed=args.seed)
+                           n_workers=args.workers, seed=args.seed,
+                           chaos=chaos,
+                           telemetry_jsonl=args.telemetry_jsonl,
+                           stall_timeout=args.stall_timeout,
+                           restart_after=args.restart_after,
+                           shed_queue_hwm=args.shed_hwm,
+                           scale_min_lanes=args.scale_min_lanes)
     with server:
         server.warmup()
         warm_builds = server.steps.builds
         server.reset_stats()
         t0 = time.perf_counter()
-        reqs = server.submit_many(traces)
+        reqs = server.submit_many(traces, deadline_ms=args.deadline_ms)
         server.drain()
         dt = time.perf_counter() - t0
         st = server.stats()
@@ -94,7 +106,26 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
               f"rounds={st['n_rounds']} reseeds={st['reseeds']} "
               f"recompiles(post-warmup)={server.steps.builds - warm_builds}")
         print(f"[gnn-serve] per-lane served={ls['served']} "
-              f"spread={ls['served_spread']:.2f}x mean")
+              f"spread={ls['served_spread']:.2f}x mean "
+              f"states={ls['states']}")
+        if (st["failed"] or st["timeouts"] or st["lane_deaths"]
+                or chaos is not None):
+            print(f"[gnn-serve] control plane: deaths={st['lane_deaths']} "
+                  f"restores={st['lane_restores']} "
+                  f"reroutes={st['reroutes']} retries={st['retries']} "
+                  f"timeouts={st['timeouts']} shed={st['shed']} "
+                  f"failed={st['failed']}")
+        served_once = sum(1 for r in reqs
+                          if r.n_settles == 1 and r.error is None)
+        settled = sum(1 for r in reqs if r.done)
+        if settled != len(reqs):
+            print(f"[gnn-serve] DELIVERY VIOLATION: "
+                  f"{len(reqs) - settled} request(s) never settled")
+            return 1
+        if chaos is not None and served_once != len(reqs):
+            print(f"[gnn-serve] chaos run lost "
+                  f"{len(reqs) - served_once} request(s)")
+            return 1
         if not args.skip_offline:
             sub = reqs[:min(32, len(reqs))]
             ref = np.concatenate([server.offline_replay(r) for r in sub])
@@ -136,6 +167,36 @@ def main():
                     help="lane compute placement: one vmapped dispatch "
                          "(stacked) or shard_map over a lane mesh")
     ap.add_argument("--seeds-per-request", type=int, default=1)
+    # control plane (DESIGN.md §13) — cluster path only
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="PATH",
+                    help="append per-lane telemetry samples/events as JSON "
+                         "lines (the flight recorder the chaos benchmark "
+                         "mines)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; queued requests past it "
+                         "fail typed (DeadlineExceeded) instead of serving "
+                         "stale")
+    ap.add_argument("--stall-timeout", type=float, default=1.0,
+                    help="seconds of stale lane heartbeat (with queued "
+                         "work) before the supervisor declares it dead")
+    ap.add_argument("--restart-after", type=float, default=2.0,
+                    help="seconds after a lane death before the supervisor "
+                         "restarts it through a shadow warm-up")
+    ap.add_argument("--shed-hwm", type=float, default=None,
+                    help="total queued requests beyond which sustained "
+                         "growth sheds new submissions (typed Overloaded); "
+                         "default: no shedding")
+    ap.add_argument("--scale-min-lanes", type=int, default=None,
+                    help="enable telemetry-driven elastic lane parking "
+                         "down to this floor (default: disabled)")
+    ap.add_argument("--chaos-kill-lane", type=int, default=None,
+                    metavar="LANE",
+                    help="chaos: kill this lane mid-stream (deterministic "
+                         "fault injection; the run then asserts zero lost "
+                         "requests)")
+    ap.add_argument("--chaos-round", type=int, default=3,
+                    help="dispatch round the --chaos-kill-lane fault "
+                         "triggers at")
     args = ap.parse_args()
 
     fanouts = tuple(int(f) for f in args.fanouts.split(","))

@@ -1,6 +1,6 @@
-"""GNN inference serving engine (DESIGN.md §10).
+"""GNN inference serving engine (DESIGN.md §10–§13).
 
-Four planes over the engines PRs 1–3 built:
+Planes over the engines PRs 1–3 built:
 
 * request plane  — ``batcher.DynamicBatcher`` (deadline/size triggers,
                    skip-ahead FIFO packing — no head-of-line blocking) on the
@@ -11,14 +11,21 @@ Four planes over the engines PRs 1–3 built:
 * compute plane  — one jitted inference step per (arch, bucket, backend)
                    through the unified sparse-backend registry, LRU-cached
                    with an explicit recompile counter;
-* measurement    — ``benchmarks/serving_bench.py`` → ``BENCH_serving.json``.
+* control plane  — ``telemetry.TelemetryHub`` (per-lane time-series, the
+                   source of truth for stats), lane supervision/failover in
+                   ``ClusterServer``, typed failures (``errors``), and
+                   deterministic fault injection (``chaos``) — DESIGN.md §13;
+* measurement    — ``benchmarks/serving_bench.py`` → ``BENCH_serving.json``,
+                   ``benchmarks/cluster_bench.py`` → ``BENCH_cluster.json``.
 
-Correctness anchor: batched-bucketed serving is parity-checked (≤1e-5)
-against offline one-request-at-a-time inference on the same sampled trees.
+Correctness anchors: batched-bucketed serving is parity-checked (≤1e-5)
+against offline one-request-at-a-time inference on the same sampled trees;
+every accepted request settles exactly once (result XOR typed error).
 """
 from repro.serve.batcher import DynamicBatcher, ServeRequest
 from repro.serve.buckets import (BucketStructure, bucket_for,
                                  build_bucket_structure, stack_trees)
+from repro.serve.chaos import ChaosInjector, InjectedSamplerFault, LaneFault
 from repro.serve.cluster import (ClusterServer, DRHMRouter,
                                  utilization_spread)
 from repro.serve.compute import (FeatureStore, StepCache, build_infer_step,
@@ -27,14 +34,23 @@ from repro.serve.device_sampler import (DeviceSamplerPlane,
                                         sample_forest_device, tree_key_mix)
 from repro.serve.engine import (GNNServer, SamplerPool, offline_inference,
                                 offline_replay)
+from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
+                                Overloaded, RetriesExhausted, SamplerError,
+                                ServeError, ServerClosed, TransientStepError)
 from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
+from repro.serve.telemetry import TelemetryHub
 
 __all__ = [
     "DynamicBatcher", "ServeRequest",
     "BucketStructure", "bucket_for", "build_bucket_structure", "stack_trees",
+    "ChaosInjector", "InjectedSamplerFault", "LaneFault",
     "ClusterServer", "DRHMRouter", "utilization_spread",
     "FeatureStore", "StepCache", "build_infer_step", "build_lane_infer_step",
     "DeviceSamplerPlane", "sample_forest_device", "tree_key_mix",
     "GNNServer", "SamplerPool", "offline_inference", "offline_replay",
+    "ServeError", "SamplerError", "DeadlineExceeded", "DrainTimeout",
+    "TransientStepError", "RetriesExhausted", "Overloaded", "LaneFailure",
+    "ServerClosed",
     "LaneSlotPools", "SlotPool", "pack_fifo",
+    "TelemetryHub",
 ]

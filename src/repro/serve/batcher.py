@@ -28,7 +28,13 @@ from repro.serve.scheduler import pack_fifo
 
 @dataclasses.dataclass
 class ServeRequest:
-    """One inference request: return embeddings/logits for ``seeds``."""
+    """One inference request: return embeddings/logits for ``seeds``.
+
+    Delivery is **exactly-once** by construction: ``finish``/``fail`` are
+    first-transition-wins (the settle lock), so a request ends up with a
+    result XOR a typed error — never both, never twice — no matter how the
+    failover machinery races the happy path (DESIGN.md §13).
+    """
 
     rid: int
     seeds: np.ndarray                 # (k,) int64 seed node ids
@@ -36,13 +42,19 @@ class ServeRequest:
     t_submit: float = 0.0             # clock time at submit
     t_ready: float = 0.0              # sampling finished, joined the queue
     t_done: float = 0.0               # result materialized
+    deadline: Optional[float] = None  # absolute clock time; None = none
+    attempts: int = 0                 # dispatch attempts (transient retries)
+    reroutes: int = 0                 # lane re-assignments (failover)
     trees: Optional[list] = None      # per-seed SampledSubgraph (data plane)
     tkm: Optional[tuple] = None       # per-seed (hi, lo) uint32 counter
     #                                   terms — device-sampling data plane
     result: Optional[np.ndarray] = None  # (k, d_out) seed outputs
     error: Optional[BaseException] = None  # pipeline failure, re-raised
+    n_settles: int = 0                # terminal transitions taken (always ≤1)
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
+    _settle_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
     @property
     def n_seeds(self) -> int:
@@ -56,24 +68,44 @@ class ServeRequest:
     def latency(self) -> float:
         return self.t_done - self.t_submit
 
-    def finish(self, result: np.ndarray, t_done: float):
-        self.result = result
-        self.t_done = t_done
-        self._event.set()
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now >= self.deadline
 
-    def fail(self, exc: BaseException, t_done: float):
-        """Mark the request failed — ``wait`` re-raises instead of hanging."""
-        self.error = exc
-        self.t_done = t_done
-        self._event.set()
+    def finish(self, result: np.ndarray, t_done: float) -> bool:
+        """Deliver the result; ``False`` if the request already settled
+        (a raced failover duplicate — dropped, not double-delivered)."""
+        with self._settle_lock:
+            if self._event.is_set():
+                return False
+            self.result = result
+            self.t_done = t_done
+            self.n_settles += 1
+            self._event.set()
+            return True
+
+    def fail(self, exc: BaseException, t_done: float) -> bool:
+        """Mark the request failed — ``wait`` re-raises instead of hanging.
+        First-transition-wins like ``finish``."""
+        with self._settle_lock:
+            if self._event.is_set():
+                return False
+            self.error = exc
+            self.t_done = t_done
+            self.n_settles += 1
+            self._event.set()
+            return True
+
+    def wait_done(self, timeout: Optional[float] = None) -> bool:
+        """Block until settled (result OR error) without raising — the
+        drain path's primitive (a failed request must not abort a drain)."""
+        return self._event.wait(timeout)
 
     def wait(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.rid} not served in {timeout}s")
         if self.error is not None:
-            raise RuntimeError(
-                f"request {self.rid} failed in the serving pipeline"
-            ) from self.error
+            raise self.error            # typed (serve.errors) — callers
+            #                             branch on shed vs timeout vs crash
         return self.result
 
 
@@ -91,8 +123,10 @@ class DynamicBatcher:
         self._cond = threading.Condition(self._lock)
         self._pending: List[ServeRequest] = []
         self._pending_seeds = 0           # running sum — O(1) ripeness check
+        self._pending_deadlined = 0       # how many pending carry a deadline
         self.n_submitted = 0
         self.n_batches = 0
+        self.n_expired = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -108,8 +142,27 @@ class DynamicBatcher:
         with self._cond:
             self._pending.append(req)
             self._pending_seeds += req.n_seeds
+            self._pending_deadlined += int(req.deadline is not None)
             self.n_submitted += 1
             self._cond.notify()
+
+    def reap_expired(self, now: float) -> List[ServeRequest]:
+        """Remove and return every pending request whose deadline passed —
+        the engine fails them with a typed ``DeadlineExceeded`` instead of
+        spending a dispatch slot on an answer nobody is waiting for.  O(1)
+        when no pending request carries a deadline (the common case)."""
+        with self._lock:
+            if self._pending_deadlined == 0:
+                return []
+            expired = [r for r in self._pending if r.expired(now)]
+            if not expired:
+                return []
+            self._pending = [r for r in self._pending if not r.expired(now)]
+            self._pending_seeds -= sum(r.n_seeds for r in expired)
+            self._pending_deadlined -= sum(int(r.deadline is not None)
+                                           for r in expired)
+            self.n_expired += len(expired)
+            return expired
 
     # -- trigger logic (lock held) ------------------------------------------
     def _ripe(self, now: float) -> bool:
@@ -123,6 +176,8 @@ class DynamicBatcher:
         taken, self._pending, used = pack_fifo(
             self._pending, self.max_seeds, size_of=lambda r: r.n_seeds)
         self._pending_seeds -= used
+        self._pending_deadlined -= sum(int(r.deadline is not None)
+                                       for r in taken)
         self.n_batches += 1
         return taken
 

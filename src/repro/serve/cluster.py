@@ -1,4 +1,5 @@
-"""Scale-out GNN serving: DRHM-routed multi-replica lanes (DESIGN.md §11).
+"""Scale-out GNN serving: DRHM-routed multi-replica lanes (DESIGN.md §11)
+under a fault-tolerant control plane (DESIGN.md §13).
 
 The paper's third headline mechanism — load balancing via **dynamic
 reseeding hash-based mapping** — runs below the kernel line everywhere else
@@ -11,26 +12,49 @@ level up: the *requests* are the TAGs, the *serving lanes* are the bins.
 
 * **routing** — a ``DRHMRouter`` maps each request's seed TAG through a
   splitmix-conditioned bin, then through the γ-seeded DRHM bijective bin→
-  lane permutation (``drhm.plan_request_routing``).  Every lane owns exactly
-  ``n_bins/n_lanes`` bins.  When per-lane queue-depth skew exceeds a
-  threshold the router **reseeds γ** and re-permutes the bins — the paper's
-  dynamic reseeding applied to traffic instead of partial products.
-  In-flight requests drain on the old map (lane is pinned at submit).
+  lane permutation (``drhm.plan_request_routing``).  Every *active* lane
+  owns exactly ``n_bins/n_active`` bins.  When per-lane queue-depth skew
+  exceeds a threshold the router **reseeds γ** and re-permutes the bins —
+  the paper's dynamic reseeding applied to traffic instead of partial
+  products.  In-flight requests drain on the old map (lane is pinned at
+  submit) unless their lane *dies*, in which case the supervisor re-routes
+  them exactly once onto the surviving set.
 * **replicated mode** — every lane holds the full resident graph; per-lane
   dynamic batchers feed **rounds**: one batch per lane, lane-stacked into a
   single dispatch of a vmapped (or mesh-sharded) bucket step
-  (``compute.build_lane_infer_step``).  Per-dispatch overhead is paid once
-  per round instead of once per lane — the aggregate-throughput win.
-* **sharded mode** — feature *residency* is DRHM-row-sharded: each lane
-  stores exactly ``n_pad/n_lanes`` rows at rest
-  (``sparse.plan.plan_feature_sharding``), and sampled-subgraph boundary
-  rows arrive through a halo exchange
-  (``core.distributed.make_halo_gather`` — the distributed executor's
-  stage-0 operand fetch).  At CI scale the halo is the full frontier (an
-  all-gather materializes the table transiently per round — see the
-  factory's docstring); shipping only the requested boundary rows is the
-  next optimization seam on this path.  The gather is an exact row copy,
-  so sharded output is **bitwise** identical to replicated output.
+  (``compute.build_lane_infer_step``).
+* **sharded mode** — feature *residency* is DRHM-row-sharded
+  (``sparse.plan.plan_feature_sharding``) with a halo exchange
+  (``core.distributed.make_halo_gather``); bitwise identical to replicated.
+
+The control plane on top (this PR):
+
+* **telemetry** (``serve.telemetry``) — per-lane counters/latency windows
+  are the source of truth ``stats()``/``lane_stats()`` derive from; a
+  monitor thread samples queue depth / in-flight / occupancy / rolling
+  p50-p99 into a time-series (JSONL-emittable) and drives every control arm
+  below from those samples.
+* **supervision** — each lane has a heartbeat the engine refreshes when the
+  lane dispatches (or is idle); a lane with queued work and a stale
+  heartbeat is declared dead.  Death ⇒ the router **rebalances** onto the
+  surviving lane set (the bijective bin→lane permutation handles any lane
+  count), the dead lane's queued + not-yet-dispatched requests re-route
+  exactly once, and — after ``restart_after`` — the lane is restarted with
+  a **shadow warm-up** (a dummy round through the shared step) before
+  rejoining the active set.  Requests already dispatched to the device
+  either complete normally (idempotent settlement makes a raced duplicate
+  impossible) or are bounded by ``drain``/``close`` timeouts.
+* **request robustness** — per-request deadlines are enforced in the
+  batcher (typed ``DeadlineExceeded``); transient device-step faults retry
+  once (``RetriesExhausted`` after); sustained queue growth sheds new
+  submissions at the door (typed ``Overloaded`` + retry-after signal);
+  sustained idle/overload trends can **elastically park/unpark lanes**.
+* **chaos** (``serve.chaos``) — all of the above is measured under
+  deterministic fault injection; with ``chaos=None`` the hot path carries
+  only ``is None`` guards.
+
+Delivery contract: every accepted request settles exactly once — a result
+XOR a typed ``serve.errors`` error; never both, never lost, never twice.
 
 Correctness anchor: every request's result must match the single-device
 offline replay (same deterministic trees, bucket-1 step) to ≤1e-5.
@@ -52,10 +76,15 @@ from repro.serve.compute import (CONV_ARCHS, FeatureStore, StepCache,
                                  _arch_key, build_fetch_step,
                                  build_infer_step, build_lane_infer_step)
 from repro.serve.engine import SamplerPool, _needs_loops
+from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
+                                Overloaded, RetriesExhausted, SamplerError,
+                                ServeError, ServerClosed, TransientStepError)
 from repro.serve.scheduler import LaneSlotPools
+from repro.serve.telemetry import TelemetryHub
 
 MODES = ("replicated", "sharded")
 PLACEMENTS = ("stacked", "mesh")
+LANE_STATES = ("active", "dead", "warming", "parked")
 
 
 # ---------------------------------------------------------------------------
@@ -63,20 +92,22 @@ PLACEMENTS = ("stacked", "mesh")
 # ---------------------------------------------------------------------------
 
 class DRHMRouter:
-    """Seed-TAG → lane mapping with dynamic γ reseeding.
+    """Seed-TAG → lane mapping with dynamic γ reseeding and an elastic
+    active-lane set.
 
-    ``lane_of(seeds) = owner(perm_γ[mix64(seed₀) mod n_bins])`` where
-    ``perm_γ`` is the DRHM bijective permutation of the bin space — so for
-    every epoch the bin→lane map is an exact-balance bijection (each lane
-    owns exactly ``n_bins/n_lanes`` bins; the property tests pin this).
+    ``lane_of(seeds) = active[perm_γ[mix64(seed₀) mod n_bins] // span]``
+    where ``perm_γ`` is the DRHM bijective permutation of the bin space —
+    so for every epoch the bin→lane map is an exact-balance bijection over
+    the **active** lanes (each owns exactly ``n_bins/n_active`` bins; the
+    property tests pin this for every subset size).
 
     ``maybe_reseed(depths)`` implements the paper's trigger at traffic
-    level: when the max per-lane queue depth exceeds ``skew_threshold`` ×
-    the mean (and there is enough traffic for the signal to be meaningful),
-    draw a new γ and re-permute.  A seed stream adversarially concentrated
-    onto one lane under γ_k occupies many *bins*; the fresh permutation
-    scatters those bins uniformly across lanes — rebalance without moving
-    any resident state (lanes are replicas; only future routing changes).
+    level: when the max active-lane queue depth exceeds ``skew_threshold``
+    × the mean (and there is enough traffic for the signal to be
+    meaningful), draw a new γ and re-permute.  ``rebalance(active)`` is the
+    failover/elasticity arm: the same re-permutation onto a different lane
+    count — shrink on a lane death or park, grow on restart — without
+    moving any resident state.
 
     Not thread-safe by itself; the cluster serializes access.
     """
@@ -93,8 +124,11 @@ class DRHMRouter:
         self.noise_slack = float(noise_slack)
         self.epoch = 0
         self.reseeds = 0
-        self._plan = drhm.plan_request_routing(max(int(n_bins), n_lanes),
-                                               n_lanes, self.seed, 0)
+        self.rebalances = 0
+        self._active = np.arange(self.n_lanes, dtype=np.int64)
+        self._base_bins = max(int(n_bins), self.n_lanes)
+        self._plan = drhm.plan_request_routing(self._base_bins, self.n_lanes,
+                                               self.seed, 0)
         self.n_bins = self._plan.n_pad        # padded to a lane multiple
         # per-epoch routed counts — the utilization-spread record the bench
         # reports before/after a reseed
@@ -109,12 +143,22 @@ class DRHMRouter:
     def gamma(self) -> int:
         return self._plan.gamma
 
+    @property
+    def active_lanes(self) -> np.ndarray:
+        return self._active.copy()
+
+    @property
+    def n_active(self) -> int:
+        return int(self._active.size)
+
     def _lanes_for(self, tags: np.ndarray) -> np.ndarray:
         """THE bin→lane math (one home, scalar and bulk paths share it):
-        splitmix-conditioned TAG → bin → γ-permuted owner lane."""
+        splitmix-conditioned TAG → bin → γ-permuted owner among the
+        active lanes."""
         bins = (drhm.mix64(np.asarray(tags, np.uint64))
                 % np.uint64(self.n_bins)).astype(np.int64)
-        return self._plan.perm[bins] // self._plan.rows_per_shard
+        return self._active[self._plan.perm[bins]
+                            // self._plan.rows_per_shard]
 
     def bin_of(self, seeds) -> int:
         tag = np.uint64(int(np.atleast_1d(seeds)[0]))
@@ -136,24 +180,51 @@ class DRHMRouter:
         return lanes
 
     def lane_map(self) -> np.ndarray:
-        """(n_bins,) bin → lane under the current γ (for the bijectivity
-        property: every lane appears exactly ``n_bins/n_lanes`` times)."""
-        return (self._plan.perm // self._plan.rows_per_shard).astype(np.int64)
+        """(n_bins,) bin → lane under the current γ and active set (for the
+        bijectivity property: every active lane appears exactly
+        ``n_bins/n_active`` times)."""
+        return self._active[self._plan.perm
+                            // self._plan.rows_per_shard].astype(np.int64)
+
+    def _replan(self):
+        self._plan = drhm.plan_request_routing(self._base_bins,
+                                               self.n_active, self.seed,
+                                               self.epoch)
+        self.n_bins = self._plan.n_pad
+        self.epoch_counts.append(np.zeros(self.n_lanes, np.int64))
 
     def reseed(self):
         self.epoch += 1
         self.reseeds += 1
-        self._plan = drhm.plan_request_routing(self.n_bins, self.n_lanes,
-                                               self.seed, self.epoch)
-        self.epoch_counts.append(np.zeros(self.n_lanes, np.int64))
+        self._replan()
+
+    def rebalance(self, active_lanes: Sequence[int]):
+        """Re-permute the bin space onto a new active-lane set (lane death,
+        restart, or elastic park/unpark).  The map stays an exact-balance
+        bijection over the new set; only future routing changes — requests
+        already pinned keep their lane (the supervisor re-routes the ones
+        whose lane is gone)."""
+        active = sorted(set(int(x) for x in active_lanes))
+        if not active:
+            raise ValueError("rebalance needs at least one active lane")
+        if active[0] < 0 or active[-1] >= self.n_lanes:
+            raise ValueError(f"active lanes {active} out of range for "
+                             f"{self.n_lanes} lanes")
+        if np.array_equal(active, self._active):
+            return
+        self.epoch += 1
+        self.rebalances += 1
+        self._active = np.asarray(active, np.int64)
+        self._replan()
 
     def maybe_reseed(self, queue_depths: Sequence[float]) -> bool:
-        # judge only depth accrued SINCE the last reseed: the old map's
-        # backlog is pinned to its lanes and no new γ can rebalance it
-        # (the subtraction over-counts as old requests finish — that only
-        # makes the trigger more conservative, never spurious)
-        d = np.maximum(np.asarray(queue_depths, np.float64)
-                       - self._depths_at_reseed, 0.0)
+        # judge only depth accrued SINCE the last reseed on ACTIVE lanes:
+        # the old map's backlog is pinned to its lanes and no new γ can
+        # rebalance it (the subtraction over-counts as old requests finish
+        # — that only makes the trigger more conservative, never spurious)
+        d_full = np.maximum(np.asarray(queue_depths, np.float64)
+                            - self._depths_at_reseed, 0.0)
+        d = d_full[self._active]
         mean = float(d.mean())
         if mean < self.min_mean_depth:
             return False                  # too little traffic to judge skew
@@ -171,6 +242,8 @@ class DRHMRouter:
 
     def info(self) -> dict:
         return {"epoch": self.epoch, "reseeds": self.reseeds,
+                "rebalances": self.rebalances,
+                "active_lanes": self._active.tolist(),
                 "gamma": self.gamma, "n_bins": self.n_bins,
                 "routed_per_epoch": [c.tolist() for c in self.epoch_counts]}
 
@@ -187,7 +260,7 @@ def utilization_spread(counts: Sequence[float]) -> float:
 # ---------------------------------------------------------------------------
 
 class ClusterServer:
-    """N-lane scale-out serving tier over one resident graph."""
+    """N-lane scale-out serving tier over one resident graph, supervised."""
 
     def __init__(self, arch_id: str, cfg, params, indptr: np.ndarray,
                  indices: np.ndarray, store: FeatureStore, *,
@@ -199,6 +272,16 @@ class ClusterServer:
                  step_cache_size: int = 16, router_bins: int = 1024,
                  skew_threshold: float = 1.5, reseed_check_every: int = 32,
                  shard_gamma: int = 0x9E3779B1, sampler_group: int = 256,
+                 chaos=None, max_retries: int = 1,
+                 telemetry_jsonl: Optional[str] = None,
+                 telemetry_interval: float = 0.05,
+                 stall_timeout: float = 1.0, restart_after: float = 2.0,
+                 auto_restart: bool = True,
+                 shed_queue_hwm: Optional[float] = None,
+                 shed_sustain_ticks: int = 2,
+                 scale_min_lanes: Optional[int] = None,
+                 scale_up_depth: float = 8.0, scale_down_depth: float = 0.25,
+                 scale_sustain_ticks: int = 4,
                  clock=time.monotonic):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; have {MODES}")
@@ -226,6 +309,8 @@ class ClusterServer:
         self.clock = clock
         self.inflight_depth = max(int(inflight), 1)
         self.reseed_check_every = max(int(reseed_check_every), 1)
+        self.chaos = chaos
+        self.max_retries = max(int(max_retries), 0)
 
         import jax
         self.mesh = None
@@ -239,6 +324,14 @@ class ClusterServer:
                     "replicated, which is device-count-agnostic)")
             self.mesh = jax.make_mesh((self.n_lanes,), ("lane",))
 
+        # telemetry plane — the source of truth stats() derives from, and
+        # the signal every control arm (supervision, shedding, scaling)
+        # acts on.  The monitor thread starts with the server.
+        self.telemetry = TelemetryHub(self.n_lanes,
+                                      interval=telemetry_interval,
+                                      jsonl_path=telemetry_jsonl,
+                                      clock=clock)
+
         # routing plane
         self.router = DRHMRouter(self.n_lanes, n_bins=router_bins, seed=seed,
                                  skew_threshold=skew_threshold)
@@ -246,6 +339,27 @@ class ClusterServer:
         self._since_check = 0
         self._lane_submitted = np.zeros(self.n_lanes, np.int64)
         self._lane_finished = np.zeros(self.n_lanes, np.int64)
+
+        # supervision plane (DESIGN.md §13 state machine)
+        self.stall_timeout = float(stall_timeout)
+        self.restart_after = float(restart_after)
+        self.auto_restart = bool(auto_restart)
+        self._sup_lock = threading.Lock()
+        self._lane_state: List[str] = ["active"] * self.n_lanes
+        self._heartbeat = np.full(self.n_lanes, clock(), np.float64)
+        self._dead_since = np.zeros(self.n_lanes, np.float64)
+
+        # load shedding + elastic scaling knobs (None disables each arm)
+        self.shed_queue_hwm = shed_queue_hwm
+        self.shed_sustain_ticks = max(int(shed_sustain_ticks), 1)
+        self._shedding = False
+        self._shed_hi_ticks = 0
+        self.scale_min_lanes = scale_min_lanes
+        self.scale_up_depth = float(scale_up_depth)
+        self.scale_down_depth = float(scale_down_depth)
+        self.scale_sustain_ticks = max(int(scale_sustain_ticks), 1)
+        self._scale_hi = 0
+        self._scale_lo = 0
 
         # request plane: one dynamic batcher per lane + in-flight slot pools
         self.batchers = [DynamicBatcher(self.max_batch_seeds,
@@ -286,23 +400,20 @@ class ClusterServer:
         self._stats_lock = threading.Lock()
         self.bucket_counts: Dict[int, int] = collections.Counter()
         self.bucket_hits = 0
-        self.n_served = 0
         self.n_rounds = 0
-        self._lane_served = np.zeros(self.n_lanes, np.int64)
-        self._lane_batches = np.zeros(self.n_lanes, np.int64)
-        self.latencies: "collections.deque[float]" = collections.deque(
-            maxlen=8192)
+        self._round_no = 0                 # engine-owned dispatch counter
 
         # data plane: the shared sampler pool; compute plane: engine thread
         # larger drain groups than the single-lane default: a cluster burst
         # queues hundreds of requests, and the vectorized forest pass's
         # fixed cost amortizes across everything a worker can grab
-        self._sampler = SamplerPool(self.indptr, self.indices, self.fanouts,
-                                    seed, on_ready=self._on_sampled,
-                                    on_error=self._fail_requests,
-                                    n_workers=n_workers,
-                                    group_cap=sampler_group)
+        self._sampler = SamplerPool(
+            self.indptr, self.indices, self.fanouts, seed,
+            on_ready=self._on_sampled, on_error=self._fail_requests,
+            n_workers=n_workers, group_cap=sampler_group,
+            fault_hook=(chaos.sampler_hook if chaos is not None else None))
         self._closing = False
+        self._close_lock = threading.Lock()
         self._stop = threading.Event()
         self._work = threading.Event()
         self._inflight: "collections.deque" = collections.deque()
@@ -310,10 +421,31 @@ class ClusterServer:
                                         name="gnn-cluster-engine")
         self._engine.start()
 
+        # monitor: probes feed the time-series; the tick drives supervision
+        self.telemetry.register_probe("queue_depth",
+                                      lambda: self.queue_depths())
+        self.telemetry.register_probe("inflight",
+                                      lambda: self.pools.depths())
+        self.telemetry.register_probe(
+            "batcher_len", lambda: [len(b) for b in self.batchers])
+        self.telemetry.add_tick(self._supervise)
+        self.telemetry.start()
+
     # -- request plane ------------------------------------------------------
-    def submit(self, seeds) -> ServeRequest:
+    def _check_admission(self, n: int = 1):
         if self._closing:
             raise RuntimeError("cluster is closed; no lane will serve this")
+        if self._shedding:
+            with self._rid_lock:
+                self.telemetry.count("shed", 0, n)
+            depth = float(np.sum(self.queue_depths()))
+            raise Overloaded(
+                depth, retry_after_s=self.telemetry.interval
+                * self.shed_sustain_ticks)
+
+    def submit(self, seeds, *,
+               deadline_ms: Optional[float] = None) -> ServeRequest:
+        self._check_admission()
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
         n_graph = self.indptr.shape[0] - 1
         if seeds.size == 0 or seeds.size > self.max_batch_seeds:
@@ -327,21 +459,29 @@ class ClusterServer:
         with self._rid_lock:
             rid = self._next_rid
             self._next_rid += 1
-            req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
+            now = self.clock()
+            req = ServeRequest(
+                rid=rid, seeds=seeds, t_submit=now,
+                deadline=(now + deadline_ms / 1e3
+                          if deadline_ms is not None else None))
             self.requests[rid] = req
         with self._router_lock:
             # lane pinned at submit — a later reseed never remaps a request
             # already in flight (it drains on the old map)
             req.lane = self.router.route(seeds)
             self._lane_submitted[req.lane] += 1
+            self.telemetry.count("submitted", req.lane)
             self._since_check += 1
             if self._since_check >= self.reseed_check_every:
                 self._since_check = 0
-                self.router.maybe_reseed(self.queue_depths())
+                if self.router.maybe_reseed(self.queue_depths()):
+                    self.telemetry.event("reseed", epoch=self.router.epoch)
         self._sampler.submit(req)
         return req
 
-    def submit_many(self, seed_lists: Sequence) -> List[ServeRequest]:
+    def submit_many(self, seed_lists: Sequence, *,
+                    deadline_ms: Optional[float] = None
+                    ) -> List[ServeRequest]:
         """Bulk ingest: validate, rid-assign, and DRHM-route a whole burst
         in vectorized passes, then hand the block to the sampler pool as one
         group.  Per-request ``submit()`` costs ~80µs under load (locks,
@@ -350,9 +490,9 @@ class ClusterServer:
         and measure the generator, not the lanes.  Routing semantics are
         identical: the reseed check still runs every ``reseed_check_every``
         requests (the burst is routed in chunks), and each request's lane is
-        pinned when its chunk is routed."""
-        if self._closing:
-            raise RuntimeError("cluster is closed; no lane will serve this")
+        pinned when its chunk is routed.  Under load shedding the whole
+        call is rejected (``Overloaded``) — callers submit in chunks."""
+        self._check_admission(len(seed_lists))
         seed_arrs = [np.atleast_1d(np.asarray(s, np.int64))
                      for s in seed_lists]
         if not seed_arrs:
@@ -368,10 +508,13 @@ class ClusterServer:
             raise ValueError(f"seed ids out of range for the resident graph "
                              f"({n_graph} nodes)")
         now = self.clock()
+        deadline = now + deadline_ms / 1e3 if deadline_ms is not None \
+            else None
         with self._rid_lock:
             rid0 = self._next_rid
             self._next_rid += len(seed_arrs)
-            reqs = [ServeRequest(rid=rid0 + i, seeds=a, t_submit=now)
+            reqs = [ServeRequest(rid=rid0 + i, seeds=a, t_submit=now,
+                                 deadline=deadline)
                     for i, a in enumerate(seed_arrs)]
             for req in reqs:
                 self.requests[req.rid] = req
@@ -387,34 +530,231 @@ class ClusterServer:
                 for j, lane in enumerate(lanes):
                     reqs[i + j].lane = int(lane)
                 np.add.at(self._lane_submitted, lanes, 1)
+                np.add.at(self.telemetry.counters["submitted"], lanes, 1)
                 self._since_check += take
                 i += take
                 if self._since_check >= self.reseed_check_every:
                     self._since_check = 0
-                    self.router.maybe_reseed(self.queue_depths())
+                    if self.router.maybe_reseed(self.queue_depths()):
+                        self.telemetry.event("reseed",
+                                             epoch=self.router.epoch)
         self._sampler.submit_block(reqs)
         return reqs
 
     def queue_depths(self) -> np.ndarray:
         """Per-lane submitted-but-unfinished request counts — the router's
-        skew signal (caller holds the router lock on the submit path)."""
+        skew signal and the monitor's shedding/scaling signal."""
         return self._lane_submitted - self._lane_finished
 
-    def _on_sampled(self, req: ServeRequest):
-        self.batchers[req.lane].submit(req)
+    def _enqueue(self, req: ServeRequest) -> bool:
+        """Hand a sampled request to its lane's batcher iff the lane is
+        active.  Holding the supervision lock closes the race against a
+        concurrent kill/park flushing that batcher — a request can never
+        slip into a queue nobody will ever drain."""
+        with self._sup_lock:
+            if self._lane_state[req.lane] != "active":
+                return False
+            self.batchers[req.lane].submit(req)
         self._work.set()
+        return True
 
-    def _fail_requests(self, reqs, exc: BaseException):
+    def _reroute_assign(self, req: ServeRequest):
+        """Pick a fresh lane for a request whose pinned lane is gone (route
+        on the *current* map — post-rebalance, so only surviving lanes)."""
+        req.reroutes += 1
+        with self._router_lock:
+            old = req.lane
+            req.lane = self.router.route(req.seeds)
+            self._lane_submitted[old] -= 1
+            self._lane_submitted[req.lane] += 1
+        self.telemetry.count("reroutes", req.lane)
+
+    def _on_sampled(self, req: ServeRequest):
+        attempts = 0
+        while not self._enqueue(req):
+            if attempts >= self.n_lanes:
+                self._settle_fail(req, LaneFailure(
+                    req.rid, req.lane, "no active lane to re-route onto"))
+                return
+            self._reroute_assign(req)
+            attempts += 1
+
+    def _settle_fail(self, req: ServeRequest, err: ServeError):
         now = self.clock()
         with self._rid_lock:
-            for req in reqs:
-                self.requests.pop(req.rid, None)
-        with self._router_lock:
-            for req in reqs:
-                if req.lane is not None:
-                    self._lane_finished[req.lane] += 1
+            self.requests.pop(req.rid, None)
+        if req.lane is not None:
+            with self._router_lock:
+                self._lane_finished[req.lane] += 1
+            if req.fail(err, now):
+                self.telemetry.count("failed", req.lane)
+        else:
+            req.fail(err, now)
+
+    def _fail_requests(self, reqs, exc: BaseException):
+        """Sampler-stage failure path: fail exactly the affected requests
+        with a typed error carrying each request id — the worker, its
+        groupmates, and the engine loop all survive."""
         for req in reqs:
-            req.fail(exc, now)
+            err = exc if isinstance(exc, ServeError) \
+                else SamplerError(req.rid, exc)
+            self.telemetry.count("sampler_faults",
+                                 req.lane if req.lane is not None else 0)
+            self._settle_fail(req, err)
+
+    # -- supervision plane (monitor tick) -----------------------------------
+    def _supervise(self, sample: dict):
+        """One control-plane tick: stall detection, restarts, shedding
+        hysteresis, elastic scaling.  Runs on the telemetry monitor thread;
+        every action it takes is also a telemetry event."""
+        now = self.clock()
+        depths = self.queue_depths()
+        # 1) heartbeat-based dead/stalled-lane detection
+        for lane in range(self.n_lanes):
+            if (self._lane_state[lane] == "active" and depths[lane] > 0
+                    and now - self._heartbeat[lane] > self.stall_timeout):
+                self._kill_lane(lane, "stalled-heartbeat")
+        # 2) lane restart after the cool-down, via shadow warm-up
+        if self.auto_restart:
+            for lane in range(self.n_lanes):
+                if (self._lane_state[lane] == "dead"
+                        and now - self._dead_since[lane]
+                        >= self.restart_after):
+                    self._restore_lane(lane)
+        # 3) load-shedding hysteresis on total queued work
+        if self.shed_queue_hwm is not None:
+            total = float(depths.sum())
+            if total > self.shed_queue_hwm:
+                self._shed_hi_ticks += 1
+            else:
+                self._shed_hi_ticks = 0
+                if self._shedding and total < 0.5 * self.shed_queue_hwm:
+                    self._shedding = False
+                    self.telemetry.event("shed_off", depth=total)
+            if (not self._shedding
+                    and self._shed_hi_ticks >= self.shed_sustain_ticks):
+                self._shedding = True
+                self.telemetry.event("shed_on", depth=total)
+        # 4) telemetry-driven elastic lane scaling
+        if self.scale_min_lanes is not None:
+            self._elastic_tick(depths)
+
+    def _elastic_tick(self, depths: np.ndarray):
+        active = [i for i in range(self.n_lanes)
+                  if self._lane_state[i] == "active"]
+        parked = [i for i in range(self.n_lanes)
+                  if self._lane_state[i] == "parked"]
+        if not active:
+            return
+        mean_depth = float(depths.sum()) / len(active)
+        if mean_depth > self.scale_up_depth:
+            self._scale_hi += 1
+            self._scale_lo = 0
+        elif mean_depth < self.scale_down_depth:
+            self._scale_lo += 1
+            self._scale_hi = 0
+        else:
+            self._scale_hi = self._scale_lo = 0
+        if self._scale_hi >= self.scale_sustain_ticks and parked:
+            self._scale_hi = 0
+            self.telemetry.event("scale_up", lane=parked[0],
+                                 mean_depth=mean_depth)
+            self._restore_lane(parked[0])
+        elif (self._scale_lo >= self.scale_sustain_ticks
+              and len(active) > max(int(self.scale_min_lanes), 1)):
+            self._scale_lo = 0
+            self.telemetry.event("scale_down", lane=active[-1],
+                                 mean_depth=mean_depth)
+            self._park_lane(active[-1])
+
+    def _deactivate(self, lane: int,
+                    new_state: str) -> Optional[List[ServeRequest]]:
+        """Common kill/park step: flip the state and flush the lane's
+        batcher under the supervision lock (no request can slip in after
+        the flush — see ``_enqueue``).  ``None`` means the lane was not
+        active (a concurrent transition won) — the caller must not
+        double-process."""
+        with self._sup_lock:
+            if self._lane_state[lane] != "active":
+                return None
+            self._lane_state[lane] = new_state
+            batches = self.batchers[lane].flush()
+        return [r for b in batches for r in b]
+
+    def _kill_lane(self, lane: int, reason: str):
+        stranded = self._deactivate(lane, "dead")
+        if stranded is None:
+            return
+        self._dead_since[lane] = self.clock()
+        self.telemetry.event("lane_dead", lane=lane, reason=reason,
+                             stranded=len(stranded))
+        if self.chaos is not None:
+            self.chaos.on_lane_dead(lane)    # the crashed process is gone
+        self._rebalance_router()
+        # exactly-once re-route of the queued backlog; requests still in
+        # the sampler stage re-route through _on_sampled's state check
+        for req in stranded:
+            self._reroute_assign(req)
+            self._on_sampled(req)
+
+    def _park_lane(self, lane: int):
+        stranded = self._deactivate(lane, "parked")
+        if stranded is None:
+            return
+        self._rebalance_router()
+        for req in stranded:
+            self._reroute_assign(req)
+            self._on_sampled(req)
+
+    def _restore_lane(self, lane: int):
+        """Dead/parked → warming (shadow warm-up off the serving path) →
+        active + router rebalance.  The warm-up runs a full dummy round
+        through the shared lane step so the restarted lane's first real
+        batch hits warm caches, not a compile."""
+        with self._sup_lock:
+            if self._lane_state[lane] not in ("dead", "parked"):
+                return
+            self._lane_state[lane] = "warming"
+        self.telemetry.event("lane_warming", lane=lane)
+        try:
+            self._shadow_warmup()
+        except Exception as exc:  # noqa: BLE001 — restart failed: back off
+            with self._sup_lock:
+                self._lane_state[lane] = "dead"
+            self._dead_since[lane] = self.clock()
+            self.telemetry.event("lane_restart_failed", lane=lane,
+                                 error=repr(exc))
+            return
+        with self._sup_lock:
+            self._lane_state[lane] = "active"
+            self._heartbeat[lane] = self.clock()
+        self.telemetry.event("lane_restored", lane=lane)
+        self._rebalance_router()
+
+    def _shadow_warmup(self, bucket: int = 1):
+        import jax
+        step = self.steps.get((bucket,))
+        struct = self._struct(bucket)
+        node_ids = np.full((self.n_lanes, struct.n_nodes), -1, np.int64)
+        hop_valid = np.zeros((self.n_lanes, struct.n_hop_edges), bool)
+        x = self._gather(node_ids)
+        jax.block_until_ready(step(self.params, x, node_ids, hop_valid))
+
+    def _rebalance_router(self):
+        active = [i for i in range(self.n_lanes)
+                  if self._lane_state[i] == "active"]
+        if not active:
+            # total outage: keep the last map; submissions queue (or shed)
+            # until a restart brings a lane back
+            self.telemetry.event("no_active_lanes")
+            return
+        with self._router_lock:
+            self.router.rebalance(active)
+        self.telemetry.event("rebalance", active=active,
+                             epoch=self.router.epoch)
+
+    def lane_states(self) -> List[str]:
+        return list(self._lane_state)
 
     # -- compute plane ------------------------------------------------------
     def _struct(self, bucket: int):
@@ -442,9 +782,27 @@ class ClusterServer:
             return self._halo(self._x_perm, self._perm_dev, node_ids)
         return self._fetch_step(node_ids)
 
-    def _collect_ready(self) -> Dict[int, List[ServeRequest]]:
-        ready = {}
+    def _reap_expired(self):
+        now = self.clock()
         for lane in range(self.n_lanes):
+            for req in self.batchers[lane].reap_expired(now):
+                self.telemetry.count("timeouts", lane)
+                self._settle_fail(
+                    req, DeadlineExceeded(req.rid, req.deadline, now))
+
+    def _collect_ready(self, shutdown: bool = False
+                       ) -> Dict[int, List[ServeRequest]]:
+        ready = {}
+        now = self.clock()
+        for lane in range(self.n_lanes):
+            if not shutdown:
+                if self._lane_state[lane] != "active":
+                    continue
+                if (self.chaos is not None
+                        and self.chaos.blocked(lane, self._round_no)):
+                    continue            # wedged: no dispatch, no heartbeat
+            if len(self.batchers[lane]) == 0 and self.pools.idle(lane):
+                self._heartbeat[lane] = now   # fully idle is healthy
             if self.pools.can_dispatch(lane):
                 batch = self.batchers[lane].poll()
                 if batch:
@@ -452,6 +810,9 @@ class ClusterServer:
         return ready
 
     def _dispatch_round(self, ready: Dict[int, List[ServeRequest]]):
+        self._round_no += 1
+        if self.chaos is not None and self.chaos.step_fault(self._round_no):
+            raise TransientStepError(self._round_no)
         trees = {lane: [t for r in batch for t in r.trees]
                  for lane, batch in ready.items()}
         bucket = bucket_for(max(len(ts) for ts in trees.values()),
@@ -468,26 +829,48 @@ class ClusterServer:
         out = step(self.params, x, node_ids, hop_valid)  # async dispatch
         slots = {lane: self.pools.acquire(lane, ready[lane][0].rid)
                  for lane in ready}
+        now = self.clock()
         with self._stats_lock:
             self.bucket_counts[bucket] += 1
             self.n_rounds += 1
-            self.bucket_hits += int(self.steps.builds == warm)
-            for lane in ready:
-                self._lane_batches[lane] += 1
+            if self.steps.builds == warm:
+                self.bucket_hits += 1
+            else:
+                self.telemetry.event("recompile", bucket=bucket)
+            for lane, batch in ready.items():
+                self.telemetry.count("batches", lane)
+                self.telemetry.count("seeds_dispatched", lane,
+                                     sum(r.n_seeds for r in batch))
+                self._heartbeat[lane] = now
         self._inflight.append((ready, out, slots))
+
+    def _retry_round(self, ready: Dict[int, List[ServeRequest]],
+                     exc: TransientStepError):
+        """Transient device-step failure: every affected request retries
+        once (idempotent delivery makes a raced duplicate harmless), then
+        fails typed."""
+        for lane, batch in ready.items():
+            for req in batch:
+                req.attempts += 1
+                if req.attempts > self.max_retries:
+                    self._settle_fail(
+                        req, RetriesExhausted(req.rid, req.attempts, exc))
+                else:
+                    self.telemetry.count("retries", req.lane)
+                    self._on_sampled(req)   # re-enqueue (re-routes if dead)
 
     def _finalize_one(self):
         ready, out, slots = self._inflight.popleft()
         out = np.asarray(out)                          # device sync
         now = self.clock()
-        n_done = 0
         for lane, batch in ready.items():
             row = 0
             for req in batch:
                 k = req.n_seeds
-                req.finish(out[lane, row:row + k].copy(), now)
+                if req.finish(out[lane, row:row + k].copy(), now):
+                    self.telemetry.count("served", req.lane)
+                    self.telemetry.observe_latency(req.lane, req.latency)
                 row += k
-            n_done += len(batch)
             self.pools.release(lane, slots[lane])
         with self._rid_lock:
             for batch in ready.values():
@@ -496,17 +879,16 @@ class ClusterServer:
         with self._router_lock:
             for lane, batch in ready.items():
                 self._lane_finished[lane] += len(batch)
-        with self._stats_lock:
-            self.n_served += n_done
-            for lane, batch in ready.items():
-                self._lane_served[lane] += len(batch)
-                self.latencies.extend(r.latency for r in batch)
 
     def _engine_loop(self):
         while not self._stop.is_set():
+            self._reap_expired()
             ready = self._collect_ready()
             if ready:
-                self._dispatch_round(ready)
+                try:
+                    self._dispatch_round(ready)
+                except TransientStepError as exc:
+                    self._retry_round(ready, exc)
                 while len(self._inflight) > self.inflight_depth:
                     self._finalize_one()
             elif self._inflight:
@@ -518,14 +900,22 @@ class ClusterServer:
                 self._work.clear()
         # shutdown flush: everything still pending forms final rounds
         # (retire in-flight rounds before each dispatch so lane slot pools
-        # can never over-subscribe; throughput is moot at shutdown)
+        # can never over-subscribe; throughput is moot at shutdown).
+        # Dead/blocked lanes flush too — close()'s contract is that every
+        # accepted request settles, and idempotent delivery makes serving
+        # an already-failed straggler a no-op.
         leftovers = [collections.deque(b.flush()) for b in self.batchers]
         while any(leftovers):
             while self._inflight:
                 self._finalize_one()
-            self._dispatch_round({lane: dq.popleft()
-                                  for lane, dq in enumerate(leftovers)
-                                  if dq})
+            round_ready = {lane: dq.popleft()
+                           for lane, dq in enumerate(leftovers) if dq}
+            try:
+                self._dispatch_round(round_ready)
+            except TransientStepError as exc:
+                self._retry_round(round_ready, exc)
+                for lane, dq in enumerate(leftovers):
+                    dq.extend(self.batchers[lane].flush())
         while self._inflight:
             self._finalize_one()
 
@@ -558,65 +948,91 @@ class ClusterServer:
         return np.concatenate(out, axis=0)
 
     def drain(self, timeout: float = 120.0):
-        """Block until every submitted request has a result."""
+        """Block until every submitted request has *settled* (result or
+        typed error).  On timeout the stragglers are failed with
+        ``DrainTimeout`` (count surfaced on the raised error) — a request
+        is never left silently pending."""
         deadline = time.monotonic() + timeout
         with self._rid_lock:
             pending = list(self.requests.values())
         for req in pending:
             left = deadline - time.monotonic()
-            if left <= 0:
-                raise TimeoutError("drain timed out")
-            req.wait(left)
+            if left <= 0 or not req.wait_done(left):
+                break
+        stragglers = [r for r in pending if not r.done]
+        if stragglers:
+            err = DrainTimeout(len(stragglers), timeout,
+                               [r.rid for r in stragglers])
+            for r in stragglers:
+                self._settle_fail(r, err)
+            raise err
 
     def reset_stats(self):
         with self._stats_lock:
             self.bucket_counts.clear()
             self.bucket_hits = 0
-            self.n_served = 0
             self.n_rounds = 0
-            self._lane_served[:] = 0
-            self._lane_batches[:] = 0
-            self.latencies.clear()
+        self.telemetry.reset()
 
     def lane_stats(self) -> dict:
+        c = self.telemetry.counters
         with self._stats_lock, self._router_lock:
-            served = self._lane_served.copy()
+            served = c["served"].copy()
             return {
                 "submitted": self._lane_submitted.tolist(),
                 "served": served.tolist(),
-                "batches": self._lane_batches.tolist(),
+                "failed": c["failed"].tolist(),
+                "reroutes": c["reroutes"].tolist(),
+                "batches": c["batches"].tolist(),
                 "queue_depths": self.queue_depths().tolist(),
+                "states": self.lane_states(),
                 "served_spread": (utilization_spread(served)
                                   if served.sum() else 1.0),
             }
 
     def stats(self) -> dict:
+        t = self.telemetry.totals()
+        ev = self.telemetry.event_counts()
         with self._stats_lock:
-            lat = np.asarray(self.latencies, np.float64)
-
-            def pct(q):
-                return float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
             return {
                 "mode": self.mode, "placement": self.placement,
                 "n_lanes": self.n_lanes,
-                "n_served": self.n_served, "n_rounds": self.n_rounds,
+                "n_served": t["served"], "n_rounds": self.n_rounds,
+                "failed": t["failed"], "shed": t["shed"],
+                "timeouts": t["timeouts"], "retries": t["retries"],
+                "reroutes": t["reroutes"],
+                "lane_deaths": ev.get("lane_dead", 0),
+                "lane_restores": ev.get("lane_restored", 0),
                 "bucket_counts": dict(self.bucket_counts),
                 "bucket_hits": self.bucket_hits,
                 "recompiles": self.steps.builds,
                 "reseeds": self.router.reseeds,
-                "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+                **self.telemetry.merged_percentiles(),
             }
 
-    def close(self):
+    def close(self, timeout: float = 60.0):
         """Graceful shutdown: samplers stop FIRST so no request can reach a
-        batcher after the engine thread's final flush."""
-        if self._closing:
-            return
-        self._closing = True
-        self._sampler.close()
+        batcher after the engine thread's final flush.  Idempotent, and
+        safe over a **wedged** engine loop: if the engine does not exit
+        within ``timeout`` every still-pending request is failed with
+        ``ServerClosed`` so no caller blocks forever."""
+        with self._close_lock:
+            if self._closing:
+                return
+            self._closing = True
+        self._sampler.close(timeout)
         self._stop.set()
         self._work.set()
-        self._engine.join()
+        self._engine.join(timeout)
+        if self._engine.is_alive():
+            now = self.clock()
+            with self._rid_lock:
+                pending = list(self.requests.values())
+                self.requests.clear()
+            for req in pending:
+                req.fail(ServerClosed(req.rid), now)
+            self.telemetry.event("close_forced", pending=len(pending))
+        self.telemetry.stop()
 
     def __enter__(self):
         return self

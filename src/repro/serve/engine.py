@@ -37,6 +37,9 @@ import numpy as np
 from repro.serve.batcher import DynamicBatcher, ServeRequest
 from repro.serve.buckets import (all_buckets, bucket_for,
                                  build_bucket_structure, stack_trees)
+from repro.serve.errors import (DeadlineExceeded, DrainTimeout,
+                                RetriesExhausted, SamplerError, ServeError,
+                                ServerClosed, TransientStepError)
 from repro.serve.compute import (FeatureStore, StepCache, _arch_key,
                                  build_infer_step)
 from repro.sparse import sampler
@@ -66,7 +69,8 @@ class SamplerPool:
     def __init__(self, indptr: np.ndarray, indices: np.ndarray,
                  fanouts: Sequence[int], key: int, *,
                  on_ready, on_error, n_workers: int = 2,
-                 tree_keys=default_tree_keys, group_cap: int = 64):
+                 tree_keys=default_tree_keys, group_cap: int = 64,
+                 fault_hook=None):
         self.indptr = np.asarray(indptr)
         self.indices = np.asarray(indices)
         self.fanouts = tuple(int(f) for f in fanouts)
@@ -74,6 +78,9 @@ class SamplerPool:
         self.tree_keys = tree_keys
         self.on_ready = on_ready
         self.on_error = on_error
+        # chaos seam: called with each request before sampling; a raise is
+        # handled exactly like a real sampling failure (isolation path)
+        self.fault_hook = fault_hook
         self.group_cap = int(group_cap)
         self._q: "queue.Queue[Optional[ServeRequest]]" = queue.Queue()
         self._workers = [threading.Thread(target=self._worker, daemon=True,
@@ -101,6 +108,9 @@ class SamplerPool:
                                          rid, seeds.shape[0]))
 
     def _sample_group(self, group):
+        if self.fault_hook is not None:
+            for r in group:
+                self.fault_hook(r)
         seeds_all = np.concatenate([r.seeds for r in group])
         keys = np.concatenate([self.tree_keys(r.rid, r.n_seeds)
                                for r in group])
@@ -144,17 +154,19 @@ class SamplerPool:
                 # the worker (and every later request routed to it) survives
                 self._sample_isolated(group)
 
-    def close(self):
+    def close(self, timeout: Optional[float] = None):
         """Join the workers, then sample anything still queued (parked
         behind a sentinel) inline on the calling thread — everything
         submitted before ``close`` still reaches ``on_ready``."""
         for _ in self._workers:
             self._q.put(None)
         for w in self._workers:
-            # unbounded: a worker always terminates (its group is bounded
-            # and sampling is finite) — a timed join that gave up would let
-            # the straggler submit to a consumer nobody reads anymore
-            w.join()
+            # unbounded by default: a worker always terminates (its group is
+            # bounded and sampling is finite).  A caller tearing down over a
+            # possibly-wedged stack passes ``timeout`` — a straggler's late
+            # ``on_ready`` is harmless because request settlement is
+            # idempotent (first transition wins).
+            w.join(timeout)
         leftovers = []
         while True:
             try:
@@ -181,6 +193,7 @@ class GNNServer:
                  max_batch_seeds: int = 16, max_wait_ms: float = 5.0,
                  n_workers: int = 2, seed: int = 0,
                  step_cache_size: int = 16, inflight: int = 2,
+                 chaos=None, max_retries: int = 1,
                  clock=time.monotonic):
         self.arch_id = arch_id
         self.cfg = cfg
@@ -194,6 +207,9 @@ class GNNServer:
         self.seed = seed
         self.clock = clock
         self.inflight_depth = max(int(inflight), 1)
+        self.chaos = chaos                # fault injector; None = no chaos
+        self.max_retries = max(int(max_retries), 0)
+        self._round_no = 0                # dispatch counter (chaos trigger)
 
         self.batcher = DynamicBatcher(self.max_batch_seeds,
                                       max_wait_ms / 1e3, clock=clock)
@@ -210,6 +226,7 @@ class GNNServer:
         self.bucket_counts: Dict[int, int] = collections.Counter()
         self.bucket_hits = 0            # batches landing in a warm bucket
         self.n_served = 0
+        self.n_deadline_failed = 0
         self.latencies: "collections.deque[float]" = collections.deque(
             maxlen=4096)
 
@@ -227,13 +244,15 @@ class GNNServer:
                                              self.fanouts, key=seed)
         else:
             self._plane = None
-            self._sampler = SamplerPool(self.indptr, self.indices,
-                                        self.fanouts, seed,
-                                        on_ready=self.batcher.submit,
-                                        on_error=self._fail_requests,
-                                        n_workers=n_workers)
+            self._sampler = SamplerPool(
+                self.indptr, self.indices, self.fanouts, seed,
+                on_ready=self.batcher.submit,
+                on_error=self._fail_requests, n_workers=n_workers,
+                fault_hook=(chaos.sampler_hook if chaos is not None
+                            else None))
         # compute plane: engine loop + in-flight double buffer
         self._closing = False
+        self._close_lock = threading.Lock()
         self._stop = threading.Event()
         self._inflight: "collections.deque" = collections.deque()
         self._engine = threading.Thread(target=self._engine_loop, daemon=True,
@@ -241,7 +260,8 @@ class GNNServer:
         self._engine.start()
 
     # -- request plane ------------------------------------------------------
-    def submit(self, seeds) -> ServeRequest:
+    def submit(self, seeds, *,
+               deadline_ms: Optional[float] = None) -> ServeRequest:
         if self._closing:
             raise RuntimeError("server is closed; no worker will serve this")
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
@@ -259,7 +279,11 @@ class GNNServer:
         with self._rid_lock:
             rid = self._next_rid
             self._next_rid += 1
-            req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock())
+            now = self.clock()
+            req = ServeRequest(
+                rid=rid, seeds=seeds, t_submit=now,
+                deadline=(now + deadline_ms / 1e3
+                          if deadline_ms is not None else None))
             self.requests[rid] = req
         if self._plane is not None:
             # device sampling: the host's whole data-plane job is two uint32
@@ -275,12 +299,17 @@ class GNNServer:
 
     # -- data plane ---------------------------------------------------------
     def _fail_requests(self, reqs, exc: BaseException):
+        """Fail exactly ``reqs`` with a typed error carrying each request
+        id; the sampler worker and the engine loop survive (the isolation
+        contract — a bad request never wedges its pipeline stage)."""
         now = self.clock()
         with self._rid_lock:
             for req in reqs:
                 self.requests.pop(req.rid, None)
         for req in reqs:
-            req.fail(exc, now)
+            err = exc if isinstance(exc, ServeError) \
+                else SamplerError(req.rid, exc)
+            req.fail(err, now)
 
     def sample_for(self, seeds, rid: int) -> list:
         """The data plane's sampling, re-runnable offline (parity anchor).
@@ -343,6 +372,10 @@ class GNNServer:
         return seeds, tk_hi, tk_lo, live
 
     def _dispatch(self, batch: List[ServeRequest]):
+        self._round_no += 1
+        if self.chaos is not None and self.chaos.step_fault(self._round_no):
+            self._retry_batch(batch, TransientStepError(self._round_no))
+            return
         n_trees = sum(r.n_seeds for r in batch)
         bucket = bucket_for(n_trees, self.max_batch_seeds)
         warm = self.steps.builds
@@ -378,8 +411,35 @@ class GNNServer:
             self.n_served += len(batch)
             self.latencies.extend(r.latency for r in batch)
 
+    def _retry_batch(self, batch: List[ServeRequest], exc: ServeError):
+        """Transient device-step failure: re-queue each request once, fail
+        it typed when its retry budget is spent.  Idempotent settlement
+        makes a duplicate delivery from a raced retry impossible."""
+        now = self.clock()
+        for req in batch:
+            req.attempts += 1
+            if req.attempts > self.max_retries:
+                with self._rid_lock:
+                    self.requests.pop(req.rid, None)
+                req.fail(RetriesExhausted(req.rid, req.attempts, exc), now)
+            else:
+                self.batcher.submit(req)
+
+    def _reap_expired(self):
+        expired = self.batcher.reap_expired(self.clock())
+        if expired:
+            now = self.clock()
+            with self._rid_lock:
+                for req in expired:
+                    self.requests.pop(req.rid, None)
+            for req in expired:
+                req.fail(DeadlineExceeded(req.rid, req.deadline, now), now)
+            with self._stats_lock:
+                self.n_deadline_failed += len(expired)
+
     def _engine_loop(self):
         while not self._stop.is_set():
+            self._reap_expired()
             if self._inflight:
                 # work is on the device: only grab a ripe batch, otherwise
                 # retire the oldest in-flight batch (its sync overlaps the
@@ -416,21 +476,36 @@ class GNNServer:
             np.asarray(step(self.params, node_ids, hop_valid))
 
     def drain(self, timeout: float = 60.0):
-        """Block until every submitted request has a result."""
+        """Block until every submitted request has *settled* (result or
+        typed error — a failed request no longer aborts the drain).  On
+        timeout the stragglers are failed with ``DrainTimeout`` (surfacing
+        the count) and the same error is raised — no request is ever left
+        silently pending."""
         deadline = time.monotonic() + timeout
         with self._rid_lock:
             pending = list(self.requests.values())
         for req in pending:
             left = deadline - time.monotonic()
-            if left <= 0:
-                raise TimeoutError("drain timed out")
-            req.wait(left)
+            if left <= 0 or not req.wait_done(left):
+                break
+        stragglers = [r for r in pending if not r.done]
+        if stragglers:
+            err = DrainTimeout(len(stragglers), timeout,
+                               [r.rid for r in stragglers])
+            now = self.clock()
+            with self._rid_lock:
+                for r in stragglers:
+                    self.requests.pop(r.rid, None)
+            for r in stragglers:
+                r.fail(err, now)
+            raise err
 
     def reset_stats(self):
         with self._stats_lock:
             self.bucket_counts.clear()
             self.bucket_hits = 0
             self.n_served = 0
+            self.n_deadline_failed = 0
             self.latencies.clear()
 
     def stats(self) -> dict:
@@ -441,6 +516,7 @@ class GNNServer:
                 return float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
             return {
                 "n_served": self.n_served,
+                "deadline_failed": self.n_deadline_failed,
                 "n_batches": int(sum(self.bucket_counts.values())),
                 "bucket_counts": dict(self.bucket_counts),
                 "bucket_hits": self.bucket_hits,
@@ -448,17 +524,30 @@ class GNNServer:
                 "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
             }
 
-    def close(self):
+    def close(self, timeout: float = 30.0):
         """Graceful shutdown: everything submitted before ``close`` is still
         served.  Order matters — samplers stop FIRST, so no request can
-        reach the batcher after the engine thread's final flush."""
-        if self._closing:
-            return
-        self._closing = True              # reject new submissions from here
+        reach the batcher after the engine thread's final flush.
+
+        Idempotent (a second call is a no-op), and safe over a **wedged**
+        engine loop: if the engine thread does not exit within ``timeout``
+        (e.g. a hung device stream), every still-pending request is failed
+        with ``ServerClosed`` so no caller blocks forever."""
+        with self._close_lock:
+            if self._closing:
+                return
+            self._closing = True          # reject new submissions from here
         if self._sampler is not None:
-            self._sampler.close()         # every accepted request is sampled
+            self._sampler.close(timeout)  # every accepted request is sampled
         self._stop.set()
-        self._engine.join()               # exits within one poll interval
+        self._engine.join(timeout)        # exits within one poll interval
+        if self._engine.is_alive():
+            now = self.clock()
+            with self._rid_lock:
+                pending = list(self.requests.values())
+                self.requests.clear()
+            for req in pending:
+                req.fail(ServerClosed(req.rid), now)
 
     def __enter__(self):
         return self

@@ -1,0 +1,113 @@
+"""Typed failure vocabulary of the serving control plane (DESIGN.md §13).
+
+Every way a request can fail is a distinct exception type carrying the
+request id (and whatever context the failure site has), so callers can
+branch on *what* went wrong — shed vs timed out vs lane crash — instead of
+string-matching a ``RuntimeError``.  All types extend ``ServeError`` (which
+extends ``RuntimeError``, so pre-existing ``pytest.raises(RuntimeError)``
+call sites keep passing), and the timeout-shaped ones also extend
+``TimeoutError``.
+
+The delivery contract these types close over: a submitted request is either
+**finished once** (``result`` set) or **failed once** with exactly one of
+these errors — never both, never neither, never twice
+(``ServeRequest.finish``/``fail`` are first-transition-wins).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class ServeError(RuntimeError):
+    """Base of every typed serving failure; ``rid`` is the request id
+    (``None`` for server-scoped failures such as ``DrainTimeout``)."""
+
+    def __init__(self, msg: str, *, rid: Optional[int] = None):
+        super().__init__(msg)
+        self.rid = rid
+
+
+class SamplerError(ServeError):
+    """The data plane failed to sample this request's fanout trees.
+
+    Carries the failing request's id and chains the worker exception as
+    ``__cause__`` — the sampler worker and the request's groupmates survive
+    (the isolation audit in ``SamplerPool._sample_isolated``)."""
+
+    def __init__(self, rid: int, cause: BaseException):
+        super().__init__(f"request {rid}: sampling failed ({cause!r})",
+                         rid=rid)
+        self.__cause__ = cause
+
+
+class DeadlineExceeded(ServeError, TimeoutError):
+    """The request's own deadline passed while it was still queued; the
+    batcher reaped it before wasting a dispatch slot on a stale answer."""
+
+    def __init__(self, rid: int, deadline: float, now: float):
+        super().__init__(f"request {rid}: deadline exceeded "
+                         f"({now - deadline:+.3f}s past)", rid=rid)
+        self.deadline = deadline
+
+
+class DrainTimeout(ServeError, TimeoutError):
+    """``drain(timeout=...)`` gave up with requests still unserved.  The
+    stragglers are *failed* with this error (not silently left pending —
+    the pre-fix behavior) and ``n_pending`` surfaces the count."""
+
+    def __init__(self, n_pending: int, timeout: float,
+                 rids: Sequence[int] = ()):
+        super().__init__(f"{n_pending} request(s) still pending after "
+                         f"{timeout:g}s drain")
+        self.n_pending = int(n_pending)
+        self.rids = list(rids)
+
+
+class TransientStepError(ServeError):
+    """A device step failed in a retryable way (injected by chaos; the
+    real-hardware analogue is a preempted/failed device stream).  The
+    engine retries the affected requests once before giving up."""
+
+    def __init__(self, round_no: int):
+        super().__init__(f"transient device-step failure at round {round_no}")
+        self.round_no = round_no
+
+
+class RetriesExhausted(ServeError):
+    """The request hit transient faults on every allowed attempt."""
+
+    def __init__(self, rid: int, attempts: int, cause: BaseException):
+        super().__init__(f"request {rid}: {attempts} attempt(s) all hit "
+                         f"transient faults", rid=rid)
+        self.attempts = attempts
+        self.__cause__ = cause
+
+
+class Overloaded(ServeError):
+    """Load shed at submit: telemetry saw sustained queue growth and the
+    server is protecting its tail latency.  ``retry_after_s`` is the
+    backpressure signal (the monitor's re-evaluation horizon)."""
+
+    def __init__(self, depth: float, retry_after_s: float):
+        super().__init__(f"overloaded (queue depth {depth:.0f}); "
+                         f"retry after {retry_after_s:.3f}s")
+        self.depth = depth
+        self.retry_after_s = retry_after_s
+
+
+class LaneFailure(ServeError):
+    """A serving lane died (crash or stalled-heartbeat) and this request
+    could not be re-routed to a surviving lane."""
+
+    def __init__(self, rid: Optional[int], lane: int, reason: str):
+        super().__init__(f"lane {lane} failed ({reason})", rid=rid)
+        self.lane = lane
+        self.reason = reason
+
+
+class ServerClosed(ServeError):
+    """The server shut down (possibly force-closed over a wedged engine)
+    with this request still unserved."""
+
+    def __init__(self, rid: Optional[int] = None):
+        super().__init__("server closed with request still pending", rid=rid)

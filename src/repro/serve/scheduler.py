@@ -113,6 +113,13 @@ class LaneSlotPools:
     def can_dispatch(self, lane: int) -> bool:
         return self.pools[lane].free_count > 0
 
+    def idle(self, lane: int) -> bool:
+        """True when the lane has *nothing* in flight — the supervision
+        heartbeat's idle-is-healthy test (a lane holding slots past the
+        stall timeout is a wedged device stream, not an idle lane)."""
+        p = self.pools[lane]
+        return p.free_count == p.n_slots
+
     def acquire(self, lane: int, tag) -> int:
         slot = self.pools[lane].acquire(tag)
         if slot is None:

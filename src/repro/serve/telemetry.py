@@ -1,0 +1,181 @@
+"""Per-lane serving telemetry: counters, events, and a sampled time-series.
+
+Before this module the cluster's observability was end-of-run aggregates
+(``stats()``/``lane_stats()`` computed once after drain).  ``TelemetryHub``
+inverts that: it is the **source of truth** the aggregates are now derived
+from, and a monitor thread turns it into a time-series while traffic runs —
+the signal the control plane's supervision, load-shedding, and elastic
+scaling arms act on (DESIGN.md §13).
+
+Three kinds of records, all cheap on the hot path:
+
+* **counters** — per-lane ``int64`` arrays (submitted/served/failed/shed/
+  timeouts/retries/reroutes/...).  Writers update them under the lock they
+  already hold for the same bookkeeping (the cluster's router/stats locks),
+  so the hub adds no new hot-path synchronization; the sampler reads them
+  lock-free (a torn read skews one sample by one count — irrelevant for a
+  trend signal, and the terminal summary is taken after the writers stop).
+* **events** — discrete control-plane transitions (``reseed``,
+  ``recompile``, ``lane_dead``, ``lane_restored``, ``rebalance``,
+  ``scale_up``/``scale_down``, ``shed_on``/``shed_off``), timestamped and
+  kept in a bounded deque.
+* **samples** — the monitor thread wakes every ``interval`` seconds, reads
+  every registered probe (queue depths, in-flight, batcher lengths), rolls
+  p50/p99 over per-lane latency windows, snapshots the counters, and hands
+  the sample to registered ``tick`` callbacks (the supervision state
+  machine lives there).
+
+With ``jsonl_path`` set, every event and sample is also appended as one
+JSON line — the machine-readable flight recorder the chaos benchmark mines
+for recovery time and p99 spike.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+COUNTERS = ("submitted", "served", "failed", "shed", "timeouts", "retries",
+            "reroutes", "sampler_faults", "batches", "seeds_dispatched")
+
+
+def _percentile(window, q: float) -> float:
+    if not window:
+        return 0.0
+    return float(np.percentile(np.asarray(window, np.float64), q))
+
+
+class TelemetryHub:
+    """Per-lane counters + events + monitor-sampled time-series."""
+
+    def __init__(self, n_lanes: int, *, interval: float = 0.05,
+                 jsonl_path: Optional[str] = None, window: int = 1024,
+                 history: int = 4096, clock: Callable[[], float] = time.monotonic):
+        if n_lanes <= 0:
+            raise ValueError(f"n_lanes must be positive, got {n_lanes}")
+        self.n_lanes = int(n_lanes)
+        self.interval = float(interval)
+        self.clock = clock
+        self.t0 = clock()
+        self.counters: Dict[str, np.ndarray] = {
+            name: np.zeros(self.n_lanes, np.int64) for name in COUNTERS}
+        self.lane_latencies: List[collections.deque] = [
+            collections.deque(maxlen=window) for _ in range(self.n_lanes)]
+        self.events: "collections.deque[dict]" = collections.deque(
+            maxlen=history)
+        self.samples: "collections.deque[dict]" = collections.deque(
+            maxlen=history)
+        self._probes: Dict[str, Callable[[], Sequence[float]]] = {}
+        self._ticks: List[Callable[[dict], None]] = []
+        self._emit_lock = threading.Lock()
+        self._jsonl = open(jsonl_path, "a") if jsonl_path else None
+        self._stop = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+
+    # -- hot-path instrumentation (writers hold their own locks) ------------
+    def count(self, name: str, lane: int = 0, n: int = 1):
+        self.counters[name][lane] += n
+
+    def observe_latency(self, lane: int, seconds: float):
+        self.lane_latencies[lane].append(seconds)
+
+    def event(self, kind: str, **fields):
+        rec = {"kind": "event", "event": kind,
+               "t": self.clock() - self.t0, **fields}
+        self.events.append(rec)
+        self._emit(rec)
+
+    # -- monitor plumbing ---------------------------------------------------
+    def register_probe(self, name: str, fn: Callable[[], Sequence[float]]):
+        """``fn() -> per-lane sequence`` read by the monitor every tick."""
+        self._probes[name] = fn
+
+    def add_tick(self, fn: Callable[[dict], None]):
+        """Called with each fresh sample (supervision/shedding hooks)."""
+        self._ticks.append(fn)
+
+    def start(self):
+        if self._monitor is not None:
+            return
+        self._monitor = threading.Thread(target=self._run, daemon=True,
+                                         name="serve-telemetry-monitor")
+        self._monitor.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=max(1.0, 10 * self.interval))
+            self._monitor = None
+        if self._jsonl is not None:
+            with self._emit_lock:
+                self._jsonl.close()
+                self._jsonl = None
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            try:
+                self.sample()
+            except Exception:  # noqa: BLE001 — a probe racing shutdown must
+                pass           # not kill the monitor (telemetry, not truth)
+
+    def sample(self) -> dict:
+        """One tick: probes + counter snapshot + rolling percentiles."""
+        lanes = []
+        probed = {name: list(np.asarray(fn(), np.float64))
+                  for name, fn in self._probes.items()}
+        for lane in range(self.n_lanes):
+            entry = {name: float(vals[lane]) if lane < len(vals) else 0.0
+                     for name, vals in probed.items()}
+            entry["p50_ms"] = _percentile(self.lane_latencies[lane], 50) * 1e3
+            entry["p99_ms"] = _percentile(self.lane_latencies[lane], 99) * 1e3
+            batches = int(self.counters["batches"][lane])
+            entry["occupancy"] = (
+                float(self.counters["seeds_dispatched"][lane]) / batches
+                if batches else 0.0)
+            lanes.append(entry)
+        rec = {"kind": "sample", "t": self.clock() - self.t0,
+               "lanes": lanes,
+               "counters": {k: v.tolist() for k, v in self.counters.items()}}
+        self.samples.append(rec)
+        self._emit(rec)
+        for fn in list(self._ticks):
+            fn(rec)
+        return rec
+
+    def _emit(self, rec: dict):
+        if self._jsonl is None:
+            return
+        with self._emit_lock:
+            if self._jsonl is not None:
+                self._jsonl.write(json.dumps(rec) + "\n")
+                self._jsonl.flush()
+
+    # -- derived aggregates (what stats()/lane_stats() now read) ------------
+    def totals(self) -> Dict[str, int]:
+        return {k: int(v.sum()) for k, v in self.counters.items()}
+
+    def merged_percentiles(self) -> Dict[str, float]:
+        merged: List[float] = []
+        for dq in self.lane_latencies:
+            merged.extend(dq)
+        return {"p50_ms": _percentile(merged, 50) * 1e3,
+                "p95_ms": _percentile(merged, 95) * 1e3,
+                "p99_ms": _percentile(merged, 99) * 1e3}
+
+    def event_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = collections.Counter()
+        for e in self.events:
+            out[e["event"]] += 1
+        return dict(out)
+
+    def reset(self):
+        """Zero the counters and windows (benchmark warm-up boundary).
+        Events and samples are history, not rate state — they stay."""
+        for v in self.counters.values():
+            v[:] = 0
+        for dq in self.lane_latencies:
+            dq.clear()

@@ -1,0 +1,348 @@
+"""Fault-tolerant serving control plane (DESIGN.md §13) under deterministic
+chaos injection.
+
+The contract every test here closes over: an accepted request settles
+**exactly once** — a result XOR a typed ``serve.errors`` error; never lost,
+never duplicated — no matter which lane dies, which worker throws, or which
+device step transiently fails.  All cluster tests run replicated/stacked
+(device-count agnostic → tier-1 safe); timing knobs are sized so each
+scenario converges in well under its drain timeout on a loaded CI box.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.gnn_serve import build_world
+from repro.serve import (ChaosInjector, ClusterServer, GNNServer,
+                         InjectedSamplerFault, LaneFault)
+from repro.serve.errors import (DeadlineExceeded, DrainTimeout, Overloaded,
+                                RetriesExhausted, SamplerError, ServerClosed)
+
+N = 4                                     # lanes in every cluster test
+
+
+def _world(arch="sage", n_nodes=256, seed=0):
+    return build_world(arch, n_nodes, 4 * n_nodes, 8, seed=seed)
+
+
+def _cluster(world, chaos=None, **kw):
+    cfg, params, indptr, indices, store = world
+    kw.setdefault("n_lanes", N)
+    kw.setdefault("fanouts", (2, 2))
+    kw.setdefault("backend", "dense")
+    kw.setdefault("seed", 0)
+    kw.setdefault("max_batch_seeds", 4)
+    kw.setdefault("telemetry_interval", 0.02)
+    return ClusterServer("sage", cfg, params, indptr, indices, store,
+                         chaos=chaos, **kw)
+
+
+def _assert_exactly_once(reqs, expect_error=None):
+    for r in reqs:
+        assert r.done, f"request {r.rid} never settled"
+        assert r.n_settles == 1, f"request {r.rid} settled {r.n_settles}×"
+        if expect_error is None:
+            assert r.error is None, f"request {r.rid} failed: {r.error!r}"
+            assert r.result is not None
+        else:
+            assert isinstance(r.error, expect_error), \
+                f"request {r.rid}: {r.error!r}"
+            assert r.result is None
+
+
+# ---------------------------------------------------------------------------
+# Injector determinism (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_injector_is_deterministic_and_validates():
+    a = ChaosInjector(seed=7, p_step_fault=0.3, p_sampler_fault=0.2)
+    b = ChaosInjector(seed=7, p_step_fault=0.3, p_sampler_fault=0.2)
+    assert ([a.step_fault(r) for r in range(200)]
+            == [b.step_fault(r) for r in range(200)])
+    assert any(a.step_fault(r) for r in range(200))
+    c = ChaosInjector(seed=8, p_step_fault=0.3)
+    assert ([a.step_fault(r) for r in range(200)]
+            != [c.step_fault(r) for r in range(200)])
+    with pytest.raises(ValueError, match="lane-fault kind"):
+        LaneFault(lane=0, kind="meteor")
+
+
+def test_injector_scripted_faults_fire_exactly_where_scheduled():
+    ch = ChaosInjector(step_fault_rounds=(3, 5))
+    assert [ch.step_fault(r) for r in range(1, 7)] == \
+        [False, False, True, False, True, False]
+
+    class R:
+        rid = 9
+    ch2 = ChaosInjector(sampler_fault_rids=(9,))
+    with pytest.raises(InjectedSamplerFault):
+        ch2.sampler_hook(R())
+    assert ch2.injected["sampler"] == 1
+
+
+def test_kill_blocks_until_acknowledged_then_spent():
+    ch = ChaosInjector(lane_faults=[LaneFault(lane=1, at_round=2)])
+    assert not ch.blocked(1, 1)           # not yet at the trigger round
+    assert ch.blocked(1, 2)               # fires
+    assert ch.blocked(1, 5)               # stays wedged (a crash, not a GC)
+    assert not ch.blocked(0, 5)           # other lanes unaffected
+    ch.on_lane_dead(1)                    # supervisor declared it dead
+    assert not ch.blocked(1, 6)           # the restarted lane is fresh
+    assert ch.injected["kill"] == 1
+
+
+def test_stall_self_recovers_after_duration():
+    t = {"now": 0.0}
+    ch = ChaosInjector(lane_faults=[LaneFault(lane=0, kind="stall",
+                                              duration=1.0)],
+                       clock=lambda: t["now"])
+    assert ch.blocked(0, 0)
+    t["now"] = 0.5
+    assert ch.blocked(0, 3)
+    t["now"] = 1.5
+    assert not ch.blocked(0, 4)           # elapsed: lane is back
+
+
+# ---------------------------------------------------------------------------
+# Tentpole scenario: lane kill mid-stream → exactly-once, zero lost
+# ---------------------------------------------------------------------------
+
+def test_lane_kill_mid_stream_every_request_exactly_once():
+    """Kill 1 of 4 lanes mid-stream.  The supervisor must detect the death,
+    rebalance the router onto the 3 survivors, re-route the dead lane's
+    backlog exactly once, and every request must settle with a result —
+    zero lost, zero duplicated."""
+    chaos = ChaosInjector(lane_faults=[LaneFault(lane=1, at_round=3)])
+    srv = _cluster(_world(), chaos=chaos, stall_timeout=0.15,
+                   auto_restart=False)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many([[i % 256] for i in range(192)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(reqs)
+        assert chaos.injected["kill"] == 1          # the fault actually fired
+        st = srv.stats()
+        assert st["lane_deaths"] == 1
+        assert st["n_served"] == len(reqs)
+        # survivors-only routing, and the backlog re-routed exactly once
+        assert srv.router.n_active == N - 1
+        assert 1 not in srv.router.active_lanes
+        assert srv.lane_states()[1] == "dead"
+        assert st["reroutes"] > 0
+        assert all(r.reroutes <= 1 for r in reqs)   # never bounced twice
+        rerouted = [r for r in reqs if r.reroutes == 1]
+        assert len(rerouted) == st["reroutes"]
+        assert all(r.lane != 1 for r in rerouted)
+        # parity survives failover: re-routed results still match offline
+        for r in rerouted[:4]:
+            np.testing.assert_allclose(r.result, srv.offline_replay(r),
+                                       atol=1e-5)
+
+
+def test_killed_lane_restarts_and_rejoins():
+    """After ``restart_after`` the supervisor shadow-warms the dead lane and
+    rebalances it back in; a second burst serves on all 4 lanes."""
+    chaos = ChaosInjector(lane_faults=[LaneFault(lane=2, at_round=2)])
+    srv = _cluster(_world(), chaos=chaos, stall_timeout=0.15,
+                   restart_after=0.2, auto_restart=True)
+    with srv:
+        srv.warmup()
+        first = srv.submit_many([[i % 256] for i in range(128)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(first)
+        deadline = time.monotonic() + 30
+        while srv.router.n_active < N and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert srv.router.n_active == N, srv.lane_states()
+        assert srv.lane_states() == ["active"] * N
+        second = srv.submit_many([[(3 * i) % 256] for i in range(64)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(second)
+        st = srv.stats()
+        assert st["lane_deaths"] == 1 and st["lane_restores"] == 1
+        assert st["n_served"] == len(first) + len(second)
+
+
+def test_stall_shorter_than_timeout_is_tolerated():
+    """A GC-pause-sized stall (shorter than the supervisor's stall timeout)
+    must NOT be treated as a death — the lane resumes by itself."""
+    chaos = ChaosInjector(lane_faults=[LaneFault(lane=0, at_round=1,
+                                                 kind="stall",
+                                                 duration=0.1)])
+    srv = _cluster(_world(), chaos=chaos, stall_timeout=2.0)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many([[i % 256] for i in range(96)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(reqs)
+        st = srv.stats()
+        assert st["lane_deaths"] == 0 and st["reroutes"] == 0
+        assert srv.router.n_active == N
+
+
+# ---------------------------------------------------------------------------
+# Sampler-worker faults: typed, isolated, non-wedging (satellite audit)
+# ---------------------------------------------------------------------------
+
+def test_cluster_sampler_fault_fails_only_that_request():
+    chaos = ChaosInjector(sampler_fault_rids=(5,))
+    srv = _cluster(_world(), chaos=chaos)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many([[i % 256] for i in range(16)])
+        srv.drain(timeout=120)
+        bad = [r for r in reqs if r.rid == 5]
+        good = [r for r in reqs if r.rid != 5]
+        _assert_exactly_once(bad, expect_error=SamplerError)
+        _assert_exactly_once(good)
+        assert bad[0].error.rid == 5                # typed, carries the rid
+        assert isinstance(bad[0].error.__cause__, InjectedSamplerFault)
+        # neither the worker nor the engine loop wedged: keep serving
+        more = srv.submit_many([[i % 256] for i in range(16)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(more)
+        assert srv.stats()["failed"] == 1
+
+
+def test_gnn_server_sampler_fault_isolated_and_typed():
+    cfg, params, indptr, indices, store = _world()
+    chaos = ChaosInjector(sampler_fault_rids=(2,))
+    srv = GNNServer("sage", cfg, params, indptr, indices, store,
+                    fanouts=(2, 2), backend="dense", chaos=chaos,
+                    max_batch_seeds=4)
+    with srv:
+        reqs = [srv.submit([i % 256]) for i in range(8)]
+        srv.drain(timeout=120)
+        bad = [r for r in reqs if r.rid == 2]
+        _assert_exactly_once(bad, expect_error=SamplerError)
+        _assert_exactly_once([r for r in reqs if r.rid != 2])
+        assert bad[0].error.rid == 2
+        more = [srv.submit([i % 256]) for i in range(8)]
+        srv.drain(timeout=120)
+        _assert_exactly_once(more)
+
+
+# ---------------------------------------------------------------------------
+# Transient step faults: retry-once, then typed exhaustion
+# ---------------------------------------------------------------------------
+
+def test_transient_step_fault_retried_and_served():
+    chaos = ChaosInjector(step_fault_rounds=(1,))
+    srv = _cluster(_world(), chaos=chaos, max_retries=1)
+    with srv:
+        srv.warmup()
+        reqs = srv.submit_many([[i % 256] for i in range(48)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(reqs)
+        st = srv.stats()
+        assert chaos.injected["step"] >= 1
+        assert st["retries"] > 0 and st["failed"] == 0
+
+
+def test_every_step_faulting_exhausts_retries_typed():
+    chaos = ChaosInjector(p_step_fault=1.0)
+    srv = _cluster(_world(), chaos=chaos, max_retries=1)
+    with srv:
+        reqs = srv.submit_many([[i % 256] for i in range(16)])
+        srv.drain(timeout=120)
+        _assert_exactly_once(reqs, expect_error=RetriesExhausted)
+        assert all(r.attempts == 2 for r in reqs)   # 1 try + 1 retry
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, shedding, drain/close (satellites)
+# ---------------------------------------------------------------------------
+
+def _all_lanes_wedged():
+    return ChaosInjector(lane_faults=[LaneFault(lane=i) for i in range(N)])
+
+
+def test_deadline_exceeded_is_typed_and_reaped():
+    """Every lane wedged + a 100 ms deadline: the batcher must reap every
+    request with ``DeadlineExceeded`` instead of leaving it queued."""
+    srv = _cluster(_world(), chaos=_all_lanes_wedged(), stall_timeout=60)
+    with srv:
+        reqs = srv.submit_many([[i % 256] for i in range(24)],
+                               deadline_ms=100)
+        srv.drain(timeout=60)
+        _assert_exactly_once(reqs, expect_error=DeadlineExceeded)
+        assert all(isinstance(r.error, TimeoutError) for r in reqs)
+        assert srv.stats()["timeouts"] == len(reqs)
+
+
+def test_sustained_overload_sheds_at_submit():
+    """Wedge every lane so the queue only grows: after the sustain window
+    the server must reject new work with typed ``Overloaded`` backpressure;
+    already-accepted requests still settle at close."""
+    srv = _cluster(_world(), chaos=_all_lanes_wedged(), stall_timeout=60,
+                   shed_queue_hwm=8, shed_sustain_ticks=1)
+    accepted = srv.submit_many([[i % 256] for i in range(32)])
+    deadline = time.monotonic() + 10
+    while not srv._shedding and time.monotonic() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(Overloaded) as ei:
+        srv.submit([0])
+    assert ei.value.retry_after_s > 0
+    assert srv.stats()["shed"] >= 1
+    srv.close()                            # shutdown flush serves the backlog
+    _assert_exactly_once(accepted)
+
+
+def test_drain_timeout_fails_stragglers_typed_then_close_is_safe():
+    """Satellite 1: a drain deadline must FAIL the stragglers with
+    ``DrainTimeout`` (count surfaced), not leave them silently pending; the
+    follow-up close must not double-settle them, and close is idempotent."""
+    srv = _cluster(_world(), chaos=_all_lanes_wedged(), stall_timeout=60)
+    reqs = srv.submit_many([[i % 256] for i in range(8)])
+    with pytest.raises(DrainTimeout) as ei:
+        srv.drain(timeout=0.3)
+    assert ei.value.n_pending == len(reqs)
+    assert sorted(ei.value.rids) == sorted(r.rid for r in reqs)
+    _assert_exactly_once(reqs, expect_error=DrainTimeout)
+    srv.close()        # flush serves the already-failed stragglers: no-op
+    srv.close()        # idempotent
+    _assert_exactly_once(reqs, expect_error=DrainTimeout)
+
+
+def test_close_times_out_over_wedged_engine_and_fails_pending():
+    """Satellite 1: ``close`` over a wedged engine loop must return within
+    its timeout and fail still-pending requests with ``ServerClosed`` —
+    never hang the caller."""
+    srv = _cluster(_world(), stall_timeout=60)
+    wedge = threading.Event()              # never set: the daemon thread
+    srv._gather = lambda node_ids: wedge.wait()    # stays parked until exit
+    reqs = srv.submit_many([[i % 256] for i in range(4)])
+    t0 = time.monotonic()
+    srv.close(timeout=0.5)
+    assert time.monotonic() - t0 < 5.0
+    _assert_exactly_once(reqs, expect_error=ServerClosed)
+    srv.close(timeout=0.5)                 # idempotent over the wedge too
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling (telemetry-driven park/unpark)
+# ---------------------------------------------------------------------------
+
+def test_elastic_parks_idle_lanes_and_unparks_under_load():
+    chaos = ChaosInjector(lane_faults=[
+        LaneFault(lane=0, at_round=1, kind="stall", duration=0.6),
+        LaneFault(lane=1, at_round=1, kind="stall", duration=0.6)])
+    srv = _cluster(_world(), chaos=chaos, stall_timeout=30,
+                   scale_min_lanes=2, scale_down_depth=0.5,
+                   scale_up_depth=1.0, scale_sustain_ticks=2)
+    with srv:
+        srv.warmup()
+        deadline = time.monotonic() + 30
+        while (srv.lane_states().count("parked") < N - 2
+               and time.monotonic() < deadline):
+            time.sleep(0.02)               # idle: scale down to the floor
+        assert srv.lane_states().count("parked") == N - 2
+        assert srv.router.n_active == 2
+        reqs = srv.submit_many([[i % 256] for i in range(64)])
+        srv.drain(timeout=120)             # stalls elapse; burst drains
+        _assert_exactly_once(reqs)
+        ev = srv.telemetry.event_counts()
+        assert ev.get("scale_down", 0) >= 2
+        assert ev.get("scale_up", 0) >= 1  # load pulled a lane back in

@@ -91,6 +91,61 @@ def test_skewed_depths_trigger_reseed_and_rebalance():
     assert utilization_spread(post) <= 1.5, post
 
 
+def test_rebalance_preserves_exact_balance_for_every_subset():
+    """Property (satellite 3): after rebalancing onto ANY non-empty active
+    subset, the bin→lane map is an exact-balance bijection over exactly
+    that subset — each active lane owns n_bins/n_active bins, inactive
+    lanes own zero."""
+    r = DRHMRouter(N_LANES, n_bins=1024, seed=11)
+    rng = np.random.default_rng(0)
+    for n_active in list(range(1, N_LANES + 1)) * 3:
+        active = sorted(rng.choice(N_LANES, n_active, replace=False)
+                        .tolist())
+        r.rebalance(active)
+        counts = np.bincount(r.lane_map(), minlength=N_LANES)
+        assert (counts[active] == r.n_bins // n_active).all(), counts
+        inactive = [i for i in range(N_LANES) if i not in active]
+        assert (counts[inactive] == 0).all(), counts
+        # routing agrees with the map: live traffic only hits survivors
+        lanes = r.route_many(np.arange(512, dtype=np.uint64))
+        assert set(np.unique(lanes)) <= set(active)
+
+
+def test_rebalance_bumps_epoch_and_noops_on_same_set():
+    r = DRHMRouter(4, n_bins=256, seed=2)
+    e0 = r.epoch
+    r.rebalance([0, 2, 3])
+    assert r.epoch == e0 + 1 and r.rebalances == 1
+    r.rebalance([3, 2, 0])                    # same set, any order: no-op
+    assert r.epoch == e0 + 1 and r.rebalances == 1
+    r.rebalance([0, 1, 2, 3])                 # growth rebalances again
+    assert r.epoch == e0 + 2
+    with pytest.raises(ValueError, match="at least one"):
+        r.rebalance([])
+    with pytest.raises(ValueError, match="out of range"):
+        r.rebalance([0, 9])
+
+
+def test_reseed_respects_the_active_set():
+    """γ reseeds and failover rebalances compose: after both, the map is
+    still balanced over the active subset only."""
+    r = DRHMRouter(N_LANES, n_bins=1024, seed=4)
+    r.rebalance([0, 3, 5, 6])
+    before = r.lane_map()
+    r.reseed()
+    after = r.lane_map()
+    assert (before != after).mean() > 0.5     # the map really moved
+    counts = np.bincount(after, minlength=N_LANES)
+    assert (counts[[0, 3, 5, 6]] == r.n_bins // 4).all()
+    assert counts[[1, 2, 4, 7]].sum() == 0
+    # skew judgment ignores inactive lanes: a huge queue on a dead lane
+    # (its pinned backlog draining) must not churn the map
+    depths = np.zeros(N_LANES)
+    depths[1] = 1000.0
+    depths[[0, 3, 5, 6]] = 5.0
+    assert not r.maybe_reseed(depths)
+
+
 def test_in_flight_requests_drain_on_the_old_map():
     """A request's lane is pinned at submit; reseeding only redirects
     future traffic."""

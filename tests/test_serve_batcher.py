@@ -169,3 +169,72 @@ def test_flush_drains_everything():
     batches = b.flush()
     assert [len(x) for x in batches] == [4, 4, 3]
     assert sorted(r.rid for x in batches for r in x) == list(range(11))
+
+
+# ---------------------------------------------------------------------------
+# deadlines + exactly-once settlement (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_reap_expired_removes_only_past_deadline():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=100, max_wait=10.0, clock=clk)
+    early, late, none = _req(0), _req(1, k=2), _req(2)
+    early.deadline, late.deadline = 0.5, 2.0
+    for r in (early, late, none):
+        b.submit(r)
+    assert b.reap_expired(0.4) == []
+    reaped = b.reap_expired(1.0)
+    assert [r.rid for r in reaped] == [0]
+    assert len(b) == 2 and b.n_expired == 1
+    # remaining bookkeeping stays consistent: a full flush yields the rest
+    assert sorted(r.rid for x in b.flush() for r in x) == [1, 2]
+
+
+def test_reap_expired_is_noop_without_deadlines():
+    b = DynamicBatcher(max_seeds=4, max_wait=10.0, clock=Clock())
+    for i in range(3):
+        b.submit(_req(i))
+    assert b.reap_expired(1e9) == []          # O(1) fast path
+    assert len(b) == 3 and b.n_expired == 0
+
+
+def test_reaped_seeds_do_not_count_toward_size_trigger():
+    clk = Clock()
+    b = DynamicBatcher(max_seeds=4, max_wait=10.0, clock=clk)
+    doomed = _req(0, k=3)
+    doomed.deadline = 0.1
+    b.submit(doomed)
+    b.reap_expired(1.0)
+    b.submit(_req(1, k=3))
+    assert b.poll() is None                   # 3 < 4: reap fixed the sum
+    b.submit(_req(2, k=1))
+    assert [r.rid for r in b.poll()] == [1, 2]
+
+
+def test_settlement_is_first_transition_wins():
+    r = _req(0)
+    assert r.finish(np.zeros((1, 2)), 1.0)
+    assert not r.fail(RuntimeError("late failover duplicate"), 2.0)
+    assert not r.finish(np.ones((1, 2)), 3.0)
+    assert r.error is None and r.n_settles == 1
+    assert r.t_done == 1.0 and (r.result == 0).all()
+
+    f = _req(1)
+    assert f.fail(ValueError("boom"), 1.0)
+    assert not f.finish(np.zeros((1, 2)), 2.0)
+    assert f.result is None and f.n_settles == 1
+    assert f.wait_done(0)                     # settled: no blocking
+    with pytest.raises(ValueError, match="boom"):
+        f.wait()                              # the typed error, re-raised
+
+
+def test_wait_raises_the_typed_error_object():
+    from repro.serve.errors import DeadlineExceeded
+    r = _req(0)
+    err = DeadlineExceeded(0, deadline=1.0, now=2.0)
+    r.fail(err, 2.0)
+    with pytest.raises(DeadlineExceeded) as ei:
+        r.wait()
+    assert ei.value is err and ei.value.rid == 0
+    assert isinstance(ei.value, TimeoutError)  # and shed/crash types differ
+    assert isinstance(ei.value, RuntimeError)  # old call sites keep passing

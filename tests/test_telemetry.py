@@ -1,0 +1,130 @@
+"""Per-lane serving telemetry (DESIGN.md §13): counters, events, samples,
+JSONL flight recorder, and the monitor thread the control plane ticks on.
+All host logic on a virtual clock — no jax, no wall-clock flake.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve.telemetry import COUNTERS, TelemetryHub
+
+
+def _hub(n_lanes=4, **kw):
+    t = {"now": 0.0}
+    kw.setdefault("clock", lambda: t["now"])
+    return TelemetryHub(n_lanes, **kw), t
+
+
+def test_counters_accumulate_per_lane_and_total():
+    hub, _ = _hub()
+    hub.count("submitted", 1)
+    hub.count("submitted", 1, 2)
+    hub.count("served", 3, 5)
+    assert hub.counters["submitted"].tolist() == [0, 3, 0, 0]
+    tot = hub.totals()
+    assert tot["submitted"] == 3 and tot["served"] == 5
+    assert set(tot) == set(COUNTERS)
+
+
+def test_percentiles_roll_over_latency_windows():
+    hub, _ = _hub(n_lanes=2, window=64)
+    for ms in range(1, 101):               # lane 0: 1..100 ms
+        hub.observe_latency(0, ms / 1e3)   # window keeps the last 64
+    p = hub.merged_percentiles()
+    assert 60 < p["p50_ms"] < 80           # median of 37..100
+    assert p["p99_ms"] > p["p95_ms"] > p["p50_ms"]
+    assert len(hub.lane_latencies[0]) == 64
+
+
+def test_sample_reads_probes_and_computes_occupancy():
+    hub, t = _hub(n_lanes=2)
+    hub.register_probe("queue_depth", lambda: [3, 7])
+    hub.count("batches", 0, 2)
+    hub.count("seeds_dispatched", 0, 6)
+    t["now"] = 1.5
+    s = hub.sample()
+    assert s["kind"] == "sample" and s["t"] == 1.5
+    assert [ln["queue_depth"] for ln in s["lanes"]] == [3.0, 7.0]
+    assert s["lanes"][0]["occupancy"] == 3.0      # 6 seeds / 2 batches
+    assert s["lanes"][1]["occupancy"] == 0.0
+    assert s["counters"]["batches"] == [2, 0]
+    assert hub.samples[-1] is s
+
+
+def test_ticks_receive_every_sample():
+    hub, _ = _hub()
+    seen = []
+    hub.add_tick(seen.append)
+    a, b = hub.sample(), hub.sample()
+    assert seen == [a, b]
+
+
+def test_events_are_timestamped_and_counted():
+    hub, t = _hub()
+    t["now"] = 2.0
+    hub.event("lane_dead", lane=1, reason="stalled")
+    hub.event("lane_dead", lane=2, reason="stalled")
+    hub.event("reseed", epoch=3)
+    assert hub.event_counts() == {"lane_dead": 2, "reseed": 1}
+    assert hub.events[0]["t"] == 2.0 and hub.events[0]["lane"] == 1
+
+
+def test_jsonl_flight_recorder(tmp_path):
+    path = tmp_path / "telemetry.jsonl"
+    hub, _ = _hub(n_lanes=2, jsonl_path=str(path))
+    hub.count("served", 0, 4)
+    hub.event("lane_dead", lane=0, reason="test")
+    hub.sample()
+    hub.stop()
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    kinds = [ln["kind"] for ln in lines]
+    assert kinds == ["event", "sample"]
+    assert lines[0]["event"] == "lane_dead" and lines[0]["lane"] == 0
+    assert lines[1]["counters"]["served"] == [4, 0]
+
+
+def test_monitor_thread_samples_and_stops_cleanly():
+    hub = TelemetryHub(2, interval=0.01)
+    fired = threading.Event()
+    hub.add_tick(lambda s: fired.set())
+    hub.start()
+    hub.start()                            # idempotent
+    assert fired.wait(5.0)
+    hub.stop()
+    n = len(hub.samples)
+    assert n >= 1
+    hub.stop()                             # idempotent
+    assert len(hub.samples) == n           # monitor really stopped
+
+
+def test_probe_exception_does_not_kill_the_monitor():
+    hub = TelemetryHub(2, interval=0.01)
+    hub.register_probe("bad", lambda: 1 / 0)
+    ok = threading.Event()
+    hub.add_tick(lambda s: ok.set())
+    hub.start()
+    try:
+        assert not ok.wait(0.1)            # bad probe blocks full samples...
+        hub._probes.clear()                # ...but the thread survives it
+        assert ok.wait(5.0)
+    finally:
+        hub.stop()
+
+
+def test_reset_zeros_counters_but_keeps_history():
+    hub, _ = _hub()
+    hub.count("served", 0, 9)
+    hub.observe_latency(0, 0.01)
+    hub.event("reseed")
+    hub.sample()
+    hub.reset()
+    assert hub.totals()["served"] == 0
+    assert hub.merged_percentiles()["p50_ms"] == 0.0
+    assert len(hub.events) == 1 and len(hub.samples) == 1
+
+
+def test_rejects_nonpositive_lanes():
+    with pytest.raises(ValueError, match="n_lanes"):
+        TelemetryHub(0)

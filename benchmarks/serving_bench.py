@@ -25,10 +25,17 @@ trajectory-gated invariant is ``sampler_fusion_ok`` (fused path faster),
 plus a conservative floor in ``check`` — the raw gain is too
 runner-noisy for a 20%-drop ratio gate.
 
-Results go to ``BENCH_serving.json`` (atomic write); ``--check``/
-``--check-json`` is CI's serving gate: parity (f32 or quantized), zero
-post-warmup recompiles, minimum batched speedup, a p99 sanity bound, and
-the single-lane fusion floor.
+A ``tracing_overhead`` record prices NeuraScope's request tracing
+(DESIGN.md §14) on the same closed-loop single-lane harness: traced vs
+untraced req/s, best-of-trials each.  The budget is ≤5% overhead with
+tracing ON (``tracing_overhead_ok``, trajectory-gated) — tracing OFF costs
+nothing by construction (the span hooks are ``None``-guarded out).
+
+Results go to ``BENCH_serving.json`` (atomic write; the file also carries a
+``kernel_stats`` snapshot of the compute-plane counter registry);
+``--check``/``--check-json`` is CI's serving gate: parity (f32 or
+quantized), zero post-warmup recompiles, minimum batched speedup, a p99
+sanity bound, the single-lane fusion floor, and the tracing budget.
 """
 from __future__ import annotations
 
@@ -48,6 +55,7 @@ DEFAULT_CELLS = (("gcn", "dense", "host"), ("gcn", "pallas", "host"),
                  ("sage", "dense", "host"), ("gin", "dense", "host"),
                  ("gcn", "dense", "device"), ("gcn", "pallas_q8", "device"))
 MIN_FUSION_GAIN = 1.1   # single-lane floor: fused sampling must clearly win
+MAX_TRACING_OVERHEAD_PCT = 5.0   # NeuraScope budget: traced req/s loss cap
 
 
 def bench_cell(arch: str, backend: str, sampler: str = "host", *,
@@ -195,6 +203,74 @@ def bench_single_lane(arch: str = "gcn", backend: str = "dense", *,
     }
 
 
+def bench_tracing_overhead(arch: str = "gcn", backend: str = "dense", *,
+                           n_nodes=2048, n_edges=8192, d_in=32,
+                           fanouts=(5, 3), n_requests=48, trials=5,
+                           workers=2, seed=0) -> dict:
+    """Price of NeuraScope tracing on the closed-loop single-lane path.
+
+    Closed loop (submit → wait) with the production ``max_wait_ms`` —
+    batch formation clocks the loop, which is the *stable* regime on a
+    shared runner (open-loop req/s swings ±15% run-to-run, drowning a
+    µs-scale per-request cost in scheduler noise), and the 5% budget
+    against that clock still bounds any structural tracing cost.  One
+    server with ``tracing=False`` and one with ``tracing=True``, both
+    live at once with *interleaved* trials (off, on, off, on, …) so a
+    slow stretch hits both arms; best-of-``trials`` req/s each — noise
+    is one-sided (preemption only ever slows a trial), so the max is the
+    honest capability estimate for both arms and the ratio stays stable.
+    The gated invariant is ``tracing_overhead_ok``: traced throughput
+    within ``MAX_TRACING_OVERHEAD_PCT`` of untraced.
+    """
+    import contextlib
+
+    from repro.launch.gnn_serve import build_world
+    from repro.serve import GNNServer
+
+    cfg, params, indptr, indices, store = build_world(
+        arch, n_nodes, n_edges, d_in, seed=seed)
+    rng = np.random.default_rng(seed + 4)
+    seeds = rng.integers(0, n_nodes, n_requests)
+
+    def one_trial(server) -> float:
+        t0 = time.perf_counter()
+        for s in seeds:
+            server.submit([int(s)]).wait(600)
+        return n_requests / (time.perf_counter() - t0)
+
+    rates = {False: 0.0, True: 0.0}
+    with contextlib.ExitStack() as stack:
+        servers = {}
+        for tracing in (False, True):
+            server = GNNServer(arch, cfg, params, indptr, indices, store,
+                               fanouts=fanouts, backend=backend,
+                               max_batch_seeds=16, max_wait_ms=2.0,
+                               n_workers=workers, seed=seed,
+                               tracing=tracing)
+            stack.enter_context(server)
+            server.warmup()
+            for s in seeds[:8]:
+                server.submit([int(s)]).wait(600)
+            servers[tracing] = server
+        for _ in range(trials):
+            for tracing in (False, True):
+                rates[tracing] = max(rates[tracing],
+                                     one_trial(servers[tracing]))
+        n_traces = servers[True].stats()["tracing"]["traces"]
+    off, on = rates[False], rates[True]
+    overhead_pct = 100.0 * (1.0 - on / off)
+    return {
+        "kind": "tracing_overhead", "arch": arch, "backend": backend,
+        "fanouts": list(fanouts), "n_requests": n_requests,
+        "untraced_reqs_per_s": round(off, 2),
+        "traced_reqs_per_s": round(on, 2),
+        "tracing_overhead_pct": round(overhead_pct, 2),
+        "traced_traces": n_traces,
+        "tracing_overhead_ok": bool(overhead_pct
+                                    <= MAX_TRACING_OVERHEAD_PCT),
+    }
+
+
 def collect(cells=DEFAULT_CELLS, **kw) -> dict:
     records = []
     for cell in cells:
@@ -214,7 +290,16 @@ def collect(cells=DEFAULT_CELLS, **kw) -> dict:
           f"host {sl['host_reqs_per_s']:.0f} req/s  "
           f"fused {sl['fused_reqs_per_s']:.0f} req/s  "
           f"gain {sl['sampler_fusion_gain']:.2f}x")
-    return {"bench": "serving", "records": records}
+    to = bench_tracing_overhead()
+    records.append(to)
+    print(f"  tracing {to['arch']}/{to['backend']}: "
+          f"off {to['untraced_reqs_per_s']:.0f} req/s  "
+          f"on {to['traced_reqs_per_s']:.0f} req/s  "
+          f"overhead {to['tracing_overhead_pct']:+.1f}% "
+          f"(ok={to['tracing_overhead_ok']})")
+    from repro.sparse.stats import stats as kernel_stats_snapshot
+    return {"bench": "serving", "records": records,
+            "kernel_stats": kernel_stats_snapshot()}
 
 
 def write_json(path: str, data: dict):
@@ -236,6 +321,17 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
     robustly on shared runners."""
     failures = 0
     for r in data["records"]:
+        if r.get("kind") == "tracing_overhead":
+            cell = f"tracing {r['arch']}/{r['backend']}"
+            if not r["tracing_overhead_ok"] \
+                    or r["tracing_overhead_pct"] > MAX_TRACING_OVERHEAD_PCT:
+                print(f"FAIL {cell}: tracing costs "
+                      f"{r['tracing_overhead_pct']}% req/s "
+                      f"(> {MAX_TRACING_OVERHEAD_PCT}% budget; "
+                      f"{r['traced_reqs_per_s']} vs "
+                      f"{r['untraced_reqs_per_s']} req/s)")
+                failures += 1
+            continue
         if r.get("kind") == "serve_single_lane":
             cell = f"single-lane {r['arch']}/{r['backend']}"
             if not r["sampler_fusion_ok"] \
@@ -271,7 +367,8 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
     if not failures:
         print(f"serving gate OK: {len(data['records'])} cells, parity ≤ "
               f"{tol:.0e} (f32) / q8 envelope, 0 steady-state recompiles, "
-              f"speedup ≥ {min_speedup}x, fusion gain ≥ {MIN_FUSION_GAIN}x")
+              f"speedup ≥ {min_speedup}x, fusion gain ≥ {MIN_FUSION_GAIN}x, "
+              f"tracing ≤ {MAX_TRACING_OVERHEAD_PCT}%")
     return failures
 
 

@@ -144,6 +144,38 @@ def imbalance(assignment: Array, n_bins: int) -> Array:
     return jnp.max(c) / jnp.maximum(jnp.mean(c), 1e-9)
 
 
+def _kstats():
+    """The NeuraScope kernel-stats registry IF it is already imported.
+
+    ``repro.core`` sits below ``repro.sparse`` in the layer order, so it
+    must not import it (cycle); recording only when the stats module is
+    live in ``sys.modules`` keeps core standalone-importable AND free of
+    any import side-effect — the registry simply misses nothing it could
+    have seen, because whoever reads stats imported the module first.
+    """
+    import sys
+    return sys.modules.get("repro.sparse.stats")
+
+
+def bin_balance_snapshot(assignment, n_bins: int) -> dict:
+    """Host-side bin-load summary (+ a NeuraScope ``drhm.imbalance`` sample).
+
+    The observability companion to ``imbalance``: benches and the cluster
+    router call it on concrete assignments to leave an auditable balance
+    trail per reseed epoch.
+    """
+    c = np.bincount(np.asarray(assignment, np.int64), minlength=int(n_bins))
+    mean = float(c.mean()) if c.size else 0.0
+    snap = {"n_bins": int(n_bins), "max": int(c.max(initial=0)),
+            "mean": mean,
+            "imbalance": float(c.max(initial=0)) / max(mean, 1e-9)}
+    st = _kstats()
+    if st is not None:
+        st.record_value("drhm.imbalance", snap["imbalance"])
+        st.record_value("drhm.bin_max", snap["max"])
+    return snap
+
+
 # ---------------------------------------------------------------------------
 # Shard planner: DRHM as a distribution policy
 # ---------------------------------------------------------------------------
@@ -186,6 +218,10 @@ def plan_row_sharding(n_ids: int, n_shards: int, gamma: int) -> DRHMShardPlan:
     if math.gcd(n_pad, g) != 1:
         g = coprime_gamma(n_pad, seed=gamma % 5)
     perm = drhm_permutation(n_pad, g)
+    st = _kstats()
+    if st is not None:
+        st.record_count("drhm.shard_plans")
+        st.record_value("drhm.shard_n_pad", n_pad)
     return DRHMShardPlan(gamma=g, n_ids=n_ids, n_pad=n_pad,
                          n_shards=n_shards, perm=perm,
                          inv_perm=invert_permutation(perm))
@@ -232,4 +268,9 @@ def plan_request_routing(n_bins: int, n_lanes: int, seed: int = 0,
     over bins); *reseeding* (a new epoch ⇒ new γ) re-permutes which bins a
     lane owns, so a seed stream that piles onto one lane under γ_k spreads
     under γ_{k+1} — the paper's dynamic reseeding applied to traffic."""
+    st = _kstats()
+    if st is not None:
+        st.record_count("drhm.route_plans")
+        if epoch:
+            st.record_count("drhm.route_reseeds")
     return plan_row_sharding(n_bins, n_lanes, route_gamma(seed, epoch))

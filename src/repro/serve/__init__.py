@@ -38,7 +38,9 @@ from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
                                 Overloaded, RetriesExhausted, SamplerError,
                                 ServeError, ServerClosed, TransientStepError)
 from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
-from repro.serve.telemetry import TelemetryHub
+from repro.serve.telemetry import TelemetryHub, percentiles_ms
+from repro.serve.tracing import (SCHEMA_VERSION, TERMINAL_SPANS, Tracer,
+                                 verify_trace, verify_traces)
 
 __all__ = [
     "DynamicBatcher", "ServeRequest",
@@ -52,5 +54,7 @@ __all__ = [
     "TransientStepError", "RetriesExhausted", "Overloaded", "LaneFailure",
     "ServerClosed",
     "LaneSlotPools", "SlotPool", "pack_fifo",
-    "TelemetryHub",
+    "TelemetryHub", "percentiles_ms",
+    "SCHEMA_VERSION", "TERMINAL_SPANS", "Tracer",
+    "verify_trace", "verify_traces",
 ]

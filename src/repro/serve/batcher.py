@@ -36,7 +36,8 @@ class ServeRequest:
     failover machinery races the happy path (DESIGN.md §13).
     """
 
-    rid: int
+    rid: int                          # also the NeuraScope trace id (the
+    #                                   TAG key stream derives from it too)
     seeds: np.ndarray                 # (k,) int64 seed node ids
     lane: Optional[int] = None        # serving lane (cluster tier routing)
     t_submit: float = 0.0             # clock time at submit
@@ -138,6 +139,8 @@ class DynamicBatcher:
             raise ValueError(
                 f"request {req.rid} carries {req.n_seeds} seeds but the "
                 f"batcher's bucket capacity is {self.max_seeds}")
+        # t_ready re-stamps on every (re-)enqueue, so a retried request's
+        # queue_wait trace span measures the *current* wait, not the first
         req.t_ready = self.clock()
         with self._cond:
             self._pending.append(req)
@@ -223,3 +226,12 @@ class DynamicBatcher:
             while self._pending:
                 out.append(self._take())
         return out
+
+    def info(self) -> dict:
+        """Queue counters as one observable (engine/cluster ``stats()``)."""
+        with self._lock:
+            return {"submitted": self.n_submitted,
+                    "batches": self.n_batches,
+                    "expired": self.n_expired,
+                    "depth": len(self._pending),
+                    "depth_seeds": self._pending_seeds}

@@ -74,13 +74,16 @@ from repro.serve.buckets import (all_buckets, bucket_for,
                                  build_bucket_structure, stack_trees)
 from repro.serve.compute import (CONV_ARCHS, FeatureStore, StepCache,
                                  _arch_key, build_fetch_step,
-                                 build_infer_step, build_lane_infer_step)
+                                 build_infer_step, build_lane_infer_step,
+                                 dispatch_annotation)
 from repro.serve.engine import SamplerPool, _needs_loops
 from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
                                 Overloaded, RetriesExhausted, SamplerError,
                                 ServeError, ServerClosed, TransientStepError)
 from repro.serve.scheduler import LaneSlotPools
 from repro.serve.telemetry import TelemetryHub
+from repro.serve.tracing import Tracer
+from repro.sparse.plan import plan_cache_info
 
 MODES = ("replicated", "sharded")
 PLACEMENTS = ("stacked", "mesh")
@@ -282,6 +285,8 @@ class ClusterServer:
                  scale_min_lanes: Optional[int] = None,
                  scale_up_depth: float = 8.0, scale_down_depth: float = 0.25,
                  scale_sustain_ticks: int = 4,
+                 tracing: bool = False, trace_capacity: int = 4096,
+                 profile_annotations: bool = False,
                  clock=time.monotonic):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; have {MODES}")
@@ -331,6 +336,21 @@ class ClusterServer:
                                       interval=telemetry_interval,
                                       jsonl_path=telemetry_jsonl,
                                       clock=clock)
+        # NeuraScope tracing — chaos convention: None when off, one
+        # ``is None`` test per stage when on.  Completed span trees share
+        # the hub's time axis and flush through its JSONL writer; with no
+        # flight recorder configured the sink stays None so settlement
+        # never materializes record dicts just to drop them.
+        self.tracer = (Tracer(capacity=trace_capacity, clock=clock,
+                              t0=self.telemetry.t0,
+                              sink=(self.telemetry.emit
+                                    if telemetry_jsonl else None))
+                       if tracing else None)
+        # attrs dicts are read-only once emitted (record() copies them into
+        # the flushed span), so the per-lane hot-path spans share one cached
+        # dict per lane instead of allocating per request
+        self._lane_attrs = [{"lane": ln} for ln in range(self.n_lanes)]
+        self.profile_annotations = bool(profile_annotations)
 
         # routing plane
         self.router = DRHMRouter(self.n_lanes, n_bins=router_bins, seed=seed,
@@ -409,7 +429,9 @@ class ClusterServer:
         # fixed cost amortizes across everything a worker can grab
         self._sampler = SamplerPool(
             self.indptr, self.indices, self.fanouts, seed,
-            on_ready=self._on_sampled, on_error=self._fail_requests,
+            on_ready=(self._on_sampled if self.tracer is None
+                      else self._on_sampled_traced),
+            on_error=self._fail_requests,
             n_workers=n_workers, group_cap=sampler_group,
             fault_hook=(chaos.sampler_hook if chaos is not None else None))
         self._closing = False
@@ -439,6 +461,10 @@ class ClusterServer:
             with self._rid_lock:
                 self.telemetry.count("shed", 0, n)
             depth = float(np.sum(self.queue_depths()))
+            if self.tracer is not None:
+                # rejected before a rid exists — a single-span terminal
+                # trace is the whole story of a shed submission
+                self.tracer.point("shed", {"n": int(n), "depth": depth})
             raise Overloaded(
                 depth, retry_after_s=self.telemetry.interval
                 * self.shed_sustain_ticks)
@@ -476,6 +502,9 @@ class ClusterServer:
                 self._since_check = 0
                 if self.router.maybe_reseed(self.queue_depths()):
                     self.telemetry.event("reseed", epoch=self.router.epoch)
+        if self.tracer is not None:
+            self.tracer.span(rid, "route", now, self.clock(),
+                             self._lane_attrs[req.lane])
         self._sampler.submit(req)
         return req
 
@@ -538,6 +567,12 @@ class ClusterServer:
                     if self.router.maybe_reseed(self.queue_depths()):
                         self.telemetry.event("reseed",
                                              epoch=self.router.epoch)
+        if self.tracer is not None:
+            t_routed = self.clock()
+            attrs = self._lane_attrs
+            for req in reqs:
+                self.tracer.span(req.rid, "route", now, t_routed,
+                                 attrs[req.lane])
         self._sampler.submit_block(reqs)
         return reqs
 
@@ -568,6 +603,18 @@ class ClusterServer:
             self._lane_submitted[old] -= 1
             self._lane_submitted[req.lane] += 1
         self.telemetry.count("reroutes", req.lane)
+        if self.tracer is not None:
+            now = self.clock()
+            self.tracer.span(req.rid, "reroute", now, now,
+                             {"from": old, "to": req.lane})
+
+    def _on_sampled_traced(self, req: ServeRequest):
+        """Tracing-on sampler hand-off (pool ``on_ready`` only — re-routed
+        and retried requests re-enter via ``_on_sampled`` directly, so the
+        sample span is emitted exactly once per request)."""
+        self.tracer.span(req.rid, "sample", req.t_submit, self.clock(),
+                         self._lane_attrs[req.lane])
+        self._on_sampled(req)
 
     def _on_sampled(self, req: ServeRequest):
         attempts = 0
@@ -588,8 +635,14 @@ class ClusterServer:
                 self._lane_finished[req.lane] += 1
             if req.fail(err, now):
                 self.telemetry.count("failed", req.lane)
+                if self.tracer is not None:
+                    self.tracer.settle(req.rid, "error", now, now,
+                                       {"error": type(err).__name__,
+                                        "lane": req.lane})
         else:
-            req.fail(err, now)
+            if req.fail(err, now) and self.tracer is not None:
+                self.tracer.settle(req.rid, "error", now, now,
+                                   {"error": type(err).__name__})
 
     def _fail_requests(self, reqs, exc: BaseException):
         """Sampler-stage failure path: fail exactly the affected requests
@@ -813,6 +866,8 @@ class ClusterServer:
         self._round_no += 1
         if self.chaos is not None and self.chaos.step_fault(self._round_no):
             raise TransientStepError(self._round_no)
+        tr = self.tracer
+        t_pack0 = self.clock() if tr is not None else 0.0
         trees = {lane: [t for r in batch for t in r.trees]
                  for lane, batch in ready.items()}
         bucket = bucket_for(max(len(ts) for ts in trees.values()),
@@ -825,11 +880,27 @@ class ClusterServer:
         for lane, ts in trees.items():
             node_ids[lane], hop_valid[lane] = stack_trees(ts, bucket,
                                                           self.fanouts)
-        x = self._gather(node_ids)
-        out = step(self.params, x, node_ids, hop_valid)  # async dispatch
+        t_pack1 = self.clock() if tr is not None else 0.0
+        if self.profile_annotations:
+            with dispatch_annotation(
+                    f"neurachip:dispatch_round:b{bucket}"):
+                x = self._gather(node_ids)
+                out = step(self.params, x, node_ids, hop_valid)
+        else:
+            x = self._gather(node_ids)
+            out = step(self.params, x, node_ids, hop_valid)  # async dispatch
         slots = {lane: self.pools.acquire(lane, ready[lane][0].rid)
                  for lane in ready}
         now = self.clock()
+        if tr is not None:
+            attrs = {"bucket": bucket, "round": self._round_no}
+            for lane, batch in ready.items():
+                for r in batch:
+                    tr.extend(r.rid, (("queue_wait", r.t_ready, t_pack0,
+                                       None),
+                                      ("bucket_pack", t_pack0, t_pack1,
+                                       attrs),
+                                      ("dispatch", t_pack1, now, attrs)))
         with self._stats_lock:
             self.bucket_counts[bucket] += 1
             self.n_rounds += 1
@@ -857,12 +928,18 @@ class ClusterServer:
                         req, RetriesExhausted(req.rid, req.attempts, exc))
                 else:
                     self.telemetry.count("retries", req.lane)
+                    if self.tracer is not None:
+                        t = self.clock()
+                        self.tracer.span(req.rid, "retry", t, t,
+                                         {"attempt": req.attempts})
                     self._on_sampled(req)   # re-enqueue (re-routes if dead)
 
     def _finalize_one(self):
         ready, out, slots = self._inflight.popleft()
         out = np.asarray(out)                          # device sync
         now = self.clock()
+        tr = self.tracer
+        settles = [] if tr is not None else None
         for lane, batch in ready.items():
             row = 0
             for req in batch:
@@ -870,8 +947,13 @@ class ClusterServer:
                 if req.finish(out[lane, row:row + k].copy(), now):
                     self.telemetry.count("served", req.lane)
                     self.telemetry.observe_latency(req.lane, req.latency)
+                    if tr is not None:
+                        settles.append((req.rid, "settle", now, now,
+                                        self._lane_attrs[lane]))
                 row += k
             self.pools.release(lane, slots[lane])
+        if settles:
+            tr.settle_many(settles)
         with self._rid_lock:
             for batch in ready.values():
                 for req in batch:
@@ -1006,8 +1088,12 @@ class ClusterServer:
                 "bucket_counts": dict(self.bucket_counts),
                 "bucket_hits": self.bucket_hits,
                 "recompiles": self.steps.builds,
+                "step_cache": self.steps.info(),
+                "plan_cache": plan_cache_info(),
                 "reseeds": self.router.reseeds,
                 **self.telemetry.merged_percentiles(),
+                **({"tracing": self.tracer.stats()}
+                   if self.tracer is not None else {}),
             }
 
     def close(self, timeout: float = 60.0):
@@ -1030,7 +1116,10 @@ class ClusterServer:
                 pending = list(self.requests.values())
                 self.requests.clear()
             for req in pending:
-                req.fail(ServerClosed(req.rid), now)
+                if req.fail(ServerClosed(req.rid), now) \
+                        and self.tracer is not None:
+                    self.tracer.settle(req.rid, "error", now, now,
+                                       {"error": "ServerClosed"})
             self.telemetry.event("close_forced", pending=len(pending))
         self.telemetry.stop()
 

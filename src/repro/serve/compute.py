@@ -142,6 +142,26 @@ def bucket_plan(struct: BucketStructure, backend: str, need_ell: bool):
                               struct.with_loops, backend, bool(need_ell)))
 
 
+def bucket_plan_cache_info() -> dict:
+    """Process-wide bucket-plan cache counters (builds/hits/size) — the
+    KernelStats registry snapshots these per bench run."""
+    return _BUCKET_PLANS.info()
+
+
+def dispatch_annotation(label: str):
+    """Opt-in ``jax.profiler`` trace annotation around a lane dispatch — a
+    context manager that names the dispatch window in a jax profiler trace
+    (``jax.profiler.trace(...)`` around the traffic), and degrades to a
+    no-op when the profiler surface is unavailable.  Never on by default:
+    the annotation itself costs a TraceMe record per round."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(label)
+    except Exception:  # pragma: no cover - depends on jax build surface
+        import contextlib
+        return contextlib.nullcontext()
+
+
 # ---------------------------------------------------------------------------
 # Inference steps
 # ---------------------------------------------------------------------------

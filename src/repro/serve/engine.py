@@ -42,7 +42,13 @@ from repro.serve.errors import (DeadlineExceeded, DrainTimeout,
                                 ServerClosed, TransientStepError)
 from repro.serve.compute import (FeatureStore, StepCache, _arch_key,
                                  build_infer_step)
+from repro.serve.telemetry import percentiles_ms
+from repro.serve.tracing import Tracer
 from repro.sparse import sampler
+from repro.sparse.plan import plan_cache_info
+
+# span attrs are read-only once emitted — hot-path spans share one dict
+_DEVICE_SAMPLE_ATTRS = {"mode": "device"}
 
 
 def _needs_loops(arch_id: str) -> bool:
@@ -194,6 +200,7 @@ class GNNServer:
                  n_workers: int = 2, seed: int = 0,
                  step_cache_size: int = 16, inflight: int = 2,
                  chaos=None, max_retries: int = 1,
+                 tracing: bool = False, trace_capacity: int = 4096,
                  clock=time.monotonic):
         self.arch_id = arch_id
         self.cfg = cfg
@@ -210,6 +217,11 @@ class GNNServer:
         self.chaos = chaos                # fault injector; None = no chaos
         self.max_retries = max(int(max_retries), 0)
         self._round_no = 0                # dispatch counter (chaos trigger)
+        # NeuraScope tracing — same convention as chaos: None when off, so
+        # the hot loops pay one ``is None`` test per stage and allocate
+        # nothing (the property tests pin the zero-span claim)
+        self.tracer = (Tracer(capacity=trace_capacity, clock=clock)
+                       if tracing else None)
 
         self.batcher = DynamicBatcher(self.max_batch_seeds,
                                       max_wait_ms / 1e3, clock=clock)
@@ -246,7 +258,10 @@ class GNNServer:
             self._plane = None
             self._sampler = SamplerPool(
                 self.indptr, self.indices, self.fanouts, seed,
-                on_ready=self.batcher.submit,
+                # tracing picks the wrapper at construction — the untraced
+                # sampler→batcher hand-off carries no branch at all
+                on_ready=(self.batcher.submit if self.tracer is None
+                          else self._on_sampled_traced),
                 on_error=self._fail_requests, n_workers=n_workers,
                 fault_hook=(chaos.sampler_hook if chaos is not None
                             else None))
@@ -292,10 +307,21 @@ class GNNServer:
             from repro.serve.device_sampler import tree_key_mix
             req.tkm = tree_key_mix(default_tree_keys(rid, seeds.shape[0]))
             req.t_ready = self.clock()
+            if self.tracer is not None:
+                # the host's whole data-plane stage is the key mix above —
+                # the span keeps the tree shape uniform across sampler modes
+                self.tracer.span(rid, "sample", now, req.t_ready,
+                                 _DEVICE_SAMPLE_ATTRS)
             self.batcher.submit(req)
         else:
             self._sampler.submit(req)
         return req
+
+    def _on_sampled_traced(self, req: ServeRequest):
+        """Tracing-on sampler hand-off: the sample span covers the whole
+        data-plane stage (pool queue wait + the vectorized forest pass)."""
+        self.tracer.span(req.rid, "sample", req.t_submit, self.clock())
+        self.batcher.submit(req)
 
     # -- data plane ---------------------------------------------------------
     def _fail_requests(self, reqs, exc: BaseException):
@@ -309,7 +335,9 @@ class GNNServer:
         for req in reqs:
             err = exc if isinstance(exc, ServeError) \
                 else SamplerError(req.rid, exc)
-            req.fail(err, now)
+            if req.fail(err, now) and self.tracer is not None:
+                self.tracer.settle(req.rid, "error", now, now,
+                                   {"error": type(err).__name__})
 
     def sample_for(self, seeds, rid: int) -> list:
         """The data plane's sampling, re-runnable offline (parity anchor).
@@ -376,6 +404,8 @@ class GNNServer:
         if self.chaos is not None and self.chaos.step_fault(self._round_no):
             self._retry_batch(batch, TransientStepError(self._round_no))
             return
+        tr = self.tracer
+        t_pack0 = self.clock() if tr is not None else 0.0
         n_trees = sum(r.n_seeds for r in batch)
         bucket = bucket_for(n_trees, self.max_batch_seeds)
         warm = self.steps.builds
@@ -383,9 +413,22 @@ class GNNServer:
         if self._plane is None:
             trees = [t for r in batch for t in r.trees]
             node_ids, hop_valid = stack_trees(trees, bucket, self.fanouts)
+            t_pack1 = self.clock() if tr is not None else 0.0
             out = step(self.params, node_ids, hop_valid)   # async dispatch
         else:
-            out = step(self.params, *self._device_batch(batch, bucket))
+            packed = self._device_batch(batch, bucket)
+            t_pack1 = self.clock() if tr is not None else 0.0
+            out = step(self.params, *packed)
+        if tr is not None:
+            # queue_wait ends where packing starts; dispatch is the async
+            # step call only — the device window shows up as the gap
+            # between dispatch.t1 and the settle span
+            t_disp = self.clock()
+            attrs = {"bucket": bucket, "round": self._round_no}
+            for r in batch:
+                tr.extend(r.rid, (("queue_wait", r.t_ready, t_pack0, None),
+                                  ("bucket_pack", t_pack0, t_pack1, attrs),
+                                  ("dispatch", t_pack1, t_disp, attrs)))
         with self._stats_lock:
             self.bucket_counts[bucket] += 1
             self.bucket_hits += int(self.steps.builds == warm)
@@ -397,11 +440,16 @@ class GNNServer:
         batch, out = self._inflight.popleft()
         out = np.asarray(out)                          # device sync
         now = self.clock()
+        tr = self.tracer
+        settles = [] if tr is not None else None
         row = 0
         for req in batch:
             k = req.n_seeds
-            req.finish(out[row:row + k].copy(), now)
+            if req.finish(out[row:row + k].copy(), now) and tr is not None:
+                settles.append((req.rid, "settle", now, now, None))
             row += k
+        if settles:
+            tr.settle_many(settles)
         with self._rid_lock:
             # results live on the request objects; the server-side index
             # must not grow without bound under sustained traffic
@@ -416,13 +464,20 @@ class GNNServer:
         it typed when its retry budget is spent.  Idempotent settlement
         makes a duplicate delivery from a raced retry impossible."""
         now = self.clock()
+        tr = self.tracer
         for req in batch:
             req.attempts += 1
             if req.attempts > self.max_retries:
                 with self._rid_lock:
                     self.requests.pop(req.rid, None)
-                req.fail(RetriesExhausted(req.rid, req.attempts, exc), now)
+                if req.fail(RetriesExhausted(req.rid, req.attempts, exc),
+                            now) and tr is not None:
+                    tr.settle(req.rid, "error", now, now,
+                              {"error": "RetriesExhausted"})
             else:
+                if tr is not None:
+                    tr.span(req.rid, "retry", now, now,
+                            {"attempt": req.attempts})
                 self.batcher.submit(req)
 
     def _reap_expired(self):
@@ -433,7 +488,10 @@ class GNNServer:
                 for req in expired:
                     self.requests.pop(req.rid, None)
             for req in expired:
-                req.fail(DeadlineExceeded(req.rid, req.deadline, now), now)
+                if req.fail(DeadlineExceeded(req.rid, req.deadline, now),
+                            now) and self.tracer is not None:
+                    self.tracer.settle(req.rid, "error", now, now,
+                                       {"error": "DeadlineExceeded"})
             with self._stats_lock:
                 self.n_deadline_failed += len(expired)
 
@@ -497,7 +555,9 @@ class GNNServer:
                 for r in stragglers:
                     self.requests.pop(r.rid, None)
             for r in stragglers:
-                r.fail(err, now)
+                if r.fail(err, now) and self.tracer is not None:
+                    self.tracer.settle(r.rid, "error", now, now,
+                                       {"error": "DrainTimeout"})
             raise err
 
     def reset_stats(self):
@@ -510,19 +570,21 @@ class GNNServer:
 
     def stats(self) -> dict:
         with self._stats_lock:
-            lat = np.asarray(self.latencies, np.float64)
-
-            def pct(q):
-                return float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
-            return {
+            out = {
                 "n_served": self.n_served,
                 "deadline_failed": self.n_deadline_failed,
                 "n_batches": int(sum(self.bucket_counts.values())),
                 "bucket_counts": dict(self.bucket_counts),
                 "bucket_hits": self.bucket_hits,
                 "recompiles": self.steps.builds,
-                "p50_ms": pct(50), "p95_ms": pct(95), "p99_ms": pct(99),
+                "step_cache": self.steps.info(),
+                "plan_cache": plan_cache_info(),
+                "batcher": self.batcher.info(),
+                **percentiles_ms(self.latencies),
             }
+        if self.tracer is not None:
+            out["tracing"] = self.tracer.stats()
+        return out
 
     def close(self, timeout: float = 30.0):
         """Graceful shutdown: everything submitted before ``close`` is still
@@ -547,7 +609,10 @@ class GNNServer:
                 pending = list(self.requests.values())
                 self.requests.clear()
             for req in pending:
-                req.fail(ServerClosed(req.rid), now)
+                if req.fail(ServerClosed(req.rid), now) \
+                        and self.tracer is not None:
+                    self.tracer.settle(req.rid, "error", now, now,
+                                       {"error": "ServerClosed"})
 
     def __enter__(self):
         return self

@@ -27,20 +27,39 @@ Three kinds of records, all cheap on the hot path:
 
 With ``jsonl_path`` set, every event and sample is also appended as one
 JSON line — the machine-readable flight recorder the chaos benchmark mines
-for recovery time and p99 spike.
+for recovery time and p99 spike, and ``launch.neurascope`` renders.  Every
+record carries ``schema_version`` (shared with the tracing records that
+flush through the same writer) and the file is size-bounded: past
+``jsonl_max_bytes`` it rotates once to ``<path>.1`` so a long chaos run
+can never grow the recorder without bound.
 """
 from __future__ import annotations
 
 import collections
 import json
+import os
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serve.tracing import SCHEMA_VERSION
+
 COUNTERS = ("submitted", "served", "failed", "shed", "timeouts", "retries",
             "reroutes", "sampler_faults", "batches", "seeds_dispatched")
+
+
+def percentiles_ms(seconds) -> Dict[str, float]:
+    """THE p50/p95/p99 definition — latencies in seconds, linear-interpolated
+    ``np.percentile``, reported in milliseconds (0.0 on empty).  One home,
+    shared by the hub, ``GNNServer.stats()``, and both serving benches, so
+    a percentile in any BENCH record means exactly one thing."""
+    arr = np.asarray(seconds, np.float64)
+    if arr.size == 0:
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+    return {f"p{q}_ms": float(np.percentile(arr, q) * 1e3)
+            for q in (50, 95, 99)}
 
 
 def _percentile(window, q: float) -> float:
@@ -54,7 +73,9 @@ class TelemetryHub:
 
     def __init__(self, n_lanes: int, *, interval: float = 0.05,
                  jsonl_path: Optional[str] = None, window: int = 1024,
-                 history: int = 4096, clock: Callable[[], float] = time.monotonic):
+                 history: int = 4096,
+                 jsonl_max_bytes: int = 64 * 1024 * 1024,
+                 clock: Callable[[], float] = time.monotonic):
         if n_lanes <= 0:
             raise ValueError(f"n_lanes must be positive, got {n_lanes}")
         self.n_lanes = int(n_lanes)
@@ -72,7 +93,13 @@ class TelemetryHub:
         self._probes: Dict[str, Callable[[], Sequence[float]]] = {}
         self._ticks: List[Callable[[dict], None]] = []
         self._emit_lock = threading.Lock()
+        self.jsonl_path = jsonl_path
+        self.jsonl_max_bytes = max(int(jsonl_max_bytes), 1)
+        self.jsonl_rotations = 0
         self._jsonl = open(jsonl_path, "a") if jsonl_path else None
+        self._jsonl_bytes = (os.path.getsize(jsonl_path)
+                             if jsonl_path and os.path.exists(jsonl_path)
+                             else 0)
         self._stop = threading.Event()
         self._monitor: Optional[threading.Thread] = None
 
@@ -84,8 +111,8 @@ class TelemetryHub:
         self.lane_latencies[lane].append(seconds)
 
     def event(self, kind: str, **fields):
-        rec = {"kind": "event", "event": kind,
-               "t": self.clock() - self.t0, **fields}
+        rec = {"kind": "event", "schema_version": SCHEMA_VERSION,
+               "event": kind, "t": self.clock() - self.t0, **fields}
         self.events.append(rec)
         self._emit(rec)
 
@@ -137,8 +164,8 @@ class TelemetryHub:
                 float(self.counters["seeds_dispatched"][lane]) / batches
                 if batches else 0.0)
             lanes.append(entry)
-        rec = {"kind": "sample", "t": self.clock() - self.t0,
-               "lanes": lanes,
+        rec = {"kind": "sample", "schema_version": SCHEMA_VERSION,
+               "t": self.clock() - self.t0, "lanes": lanes,
                "counters": {k: v.tolist() for k, v in self.counters.items()}}
         self.samples.append(rec)
         self._emit(rec)
@@ -146,13 +173,30 @@ class TelemetryHub:
             fn(rec)
         return rec
 
+    def emit(self, rec: dict):
+        """Append one foreign record to the flight recorder — the tracing
+        sink (completed span trees flush through the same writer, same
+        lock, same rotation, same ``schema_version``)."""
+        self._emit(rec)
+
     def _emit(self, rec: dict):
         if self._jsonl is None:
             return
+        line = json.dumps(rec) + "\n"
         with self._emit_lock:
-            if self._jsonl is not None:
-                self._jsonl.write(json.dumps(rec) + "\n")
-                self._jsonl.flush()
+            if self._jsonl is None:
+                return
+            self._jsonl.write(line)
+            self._jsonl.flush()
+            self._jsonl_bytes += len(line)
+            if self._jsonl_bytes >= self.jsonl_max_bytes:
+                # single-slot rotation: the recorder holds at most
+                # max_bytes live + max_bytes archived, however long the run
+                self._jsonl.close()
+                os.replace(self.jsonl_path, self.jsonl_path + ".1")
+                self._jsonl = open(self.jsonl_path, "a")
+                self._jsonl_bytes = 0
+                self.jsonl_rotations += 1
 
     # -- derived aggregates (what stats()/lane_stats() now read) ------------
     def totals(self) -> Dict[str, int]:
@@ -162,9 +206,7 @@ class TelemetryHub:
         merged: List[float] = []
         for dq in self.lane_latencies:
             merged.extend(dq)
-        return {"p50_ms": _percentile(merged, 50) * 1e3,
-                "p95_ms": _percentile(merged, 95) * 1e3,
-                "p99_ms": _percentile(merged, 99) * 1e3}
+        return percentiles_ms(merged)
 
     def event_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = collections.Counter()

@@ -1,3 +1,3 @@
-from repro.sparse import graph, plan, segment_ops  # noqa: F401
+from repro.sparse import graph, plan, segment_ops, stats  # noqa: F401
 from repro.sparse import backend  # noqa: F401  (imports plan; keep after)
 from repro.sparse import spgemm  # noqa: F401  (registers spgemm executors)

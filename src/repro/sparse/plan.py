@@ -209,6 +209,7 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
 
     if "pallas" in backends or "pallas_q8" in backends:
         from repro.sparse.graph import pack_dedup_chunks
+        from repro.sparse.stats import record_count, record_value
         pack_kw = dict(block_rows=block_rows, width_cap=width_cap,
                        width_multiple=width_multiple)
         # forward (A) and transpose (Aᵀ — the kernelized backward's layout);
@@ -218,6 +219,13 @@ def make_plan(senders: np.ndarray, receivers: np.ndarray, n_rows: int,
                                 int(n_rows), **pack_kw)
         tr = pack_dedup_chunks(s[vidx], r[vidx], base[vidx], int(n_rows),
                                int(n_rows), **pack_kw)
+        record_count("plan.dedup_packs", 2)
+        record_value("plan.chunk_width", fwd.u_cols.shape[1])
+        record_value("plan.n_chunks", fwd.u_cols.shape[0])
+        # hub splits: chunks minted beyond one-per-output-block — a high-
+        # degree (hub) receiver block's operand set overflowing its tile
+        record_value("plan.hub_splits",
+                     int(fwd.u_cols.shape[0] - np.unique(fwd.out_block).size))
         slots = np.full(e, fwd.a.size, np.int32)
         slots[vidx] = fwd.slots
         t_slots = np.full(e, tr.a.size, np.int32)

@@ -98,6 +98,13 @@ def quantize_chunk_tiles(a: Array, n_chunks: int) -> Tuple[Array, Array]:
     tiles = a.reshape(n_chunks, -1)
     scale = _safe_scale(jnp.max(jnp.abs(tiles), axis=1))
     q = jnp.clip(jnp.round(tiles / scale[:, None]), -Q8_MAX, Q8_MAX)
+    if not isinstance(scale, jax.core.Tracer):
+        # concrete (plan-time) quantization only — the in-jit re-quantize
+        # path carries tracers, which must not touch host bookkeeping
+        from repro.sparse.stats import record_count, record_value
+        record_count("q8.tile_quants")
+        record_value("q8.scale_max", float(jnp.max(scale)))
+        record_value("q8.scale_mean", float(jnp.mean(scale)))
     return q.reshape(a.shape).astype(jnp.int8), scale
 
 

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.eviction import bloat_percent
+from repro.sparse.stats import record_count, record_value
 
 __all__ = ["SpgemmSymbolic", "SpgemmPlan", "symbolic", "make_spgemm_plan",
            "hash_bucket", "hash_dedup_row_nnz", "find_block_gammas",
@@ -157,6 +158,9 @@ def hash_dedup_row_nnz(pp_row: np.ndarray, pp_col: np.ndarray, n_rows: int,
                 placed += 1
         row_nnz[i] = placed
         occupancy_peak = max(occupancy_peak, placed)
+    record_count("hashpad.rows", int(n_rows))
+    record_count("hashpad.probes", int(probes))
+    record_value("hashpad.occupancy_peak", occupancy_peak / pad_width)
     return row_nnz, {"probes": probes, "occupancy_peak": occupancy_peak}
 
 
@@ -517,6 +521,14 @@ def make_spgemm_plan(a_rows: np.ndarray, a_cols: np.ndarray, n_rows: int,
         # --- pad → C gather -----------------------------------------------
         out_bucket = hash_bucket(sym.c_col,
                                  gammas[sym.c_row // block_rows], pad_width)
+        record_count("spgemm.plans")
+        record_count("spgemm.reseeds", reseeds)
+        record_count("spgemm.collisions", collisions)
+        record_count("spgemm.pad_growths", growths)
+        record_value("spgemm.pad_width", pad_width)
+        record_value("spgemm.pad_occupancy", max_row / pad_width)
+        record_value("spgemm.bloat_pct", sym.bloat_pct)
+        record_value("spgemm.chunk_width", width)
         kw.update(
             pp_dedup=int(total), pad_width=int(pad_width),
             n_blocks=int(ch.n_blocks), n_chunks=int(n_chunks),

@@ -21,22 +21,29 @@ records per run (DESIGN.md §11):
   one lane under the initial γ): the router must reseed and the post-reseed
   per-lane utilization spread must fall under 1.5× mean.
 
-Plus two chaos records (DESIGN.md §13), also runnable alone via ``--chaos``
-(which refreshes just those records inside the committed JSON):
+Plus three chaos/SLO records (DESIGN.md §13, §15), also runnable alone via
+``--chaos`` (which refreshes just those records inside the committed JSON):
 
 * **chaos_failover** — a scripted lane kill mid-burst: zero lost requests,
   exactly-once settlement, and detection/recovery/restart latencies mined
   from the telemetry JSONL flight recorder, plus the p99 spike ratio vs an
   identical clean run.  The chaos server runs with NeuraScope tracing ON
-  and its flight recorder persists at ``BENCH_chaos_flight.jsonl`` — the
-  artifact ``neurascope`` renders and CI uploads on failure;
+  and its flight recorder persists at ``artifacts/BENCH_chaos_flight.jsonl``
+  — the artifact ``neurascope`` renders and CI uploads on failure; its
+  trace records must pass ``verify_traces`` (``trace_contract_ok``);
 * **chaos_overload** — every lane wedged under sustained submissions: the
   server must shed with typed ``Overloaded`` backpressure while every
-  *accepted* request still settles exactly once at close.
+  *accepted* request still settles exactly once at close;
+* **slo_shed** — burn-rate shedding precedence (DESIGN.md §15): under a
+  serving-but-slow load with unreachable latency targets, best_effort must
+  shed before any interactive request, and the scraped ``/metrics``
+  exposition must agree with the engine's own summary (per-class p99
+  within one histogram bucket, burn-rate gauge within 25%).
 
-A ``tracing_overhead`` record prices tracing at cluster scale (traced vs
-untraced replicated burst, ``tracing_overhead_ok`` ≤5%), and the JSON
-carries a ``kernel_stats`` snapshot of the compute-plane counter registry.
+``tracing_overhead`` and ``metrics_overhead`` records price the two
+observability planes at cluster scale (instrumented vs bare interleaved
+closed loops, each gated ≤5%), and the JSON carries a ``kernel_stats``
+snapshot of the compute-plane counter registry.
 """
 from __future__ import annotations
 
@@ -54,9 +61,10 @@ import time
 import numpy as np
 
 DEFAULT_JSON = "BENCH_cluster.json"
-FLIGHT_JSONL = "BENCH_chaos_flight.jsonl"
+FLIGHT_JSONL = os.path.join("artifacts", "BENCH_chaos_flight.jsonl")
 N_LANES = 8
 MAX_TRACING_OVERHEAD_PCT = 5.0
+MAX_METRICS_OVERHEAD_PCT = 5.0
 
 
 def _one_burst(server, traces) -> float:
@@ -199,8 +207,11 @@ def bench_reseed(arch="gcn", backend="dense", *, n_nodes=2048, n_edges=8192,
 
 
 def _mine_jsonl(path: str):
-    """Parse the telemetry flight recorder: (event records, sample count)."""
-    events, n_samples = [], 0
+    """Parse the telemetry flight recorder: (event records, sample count,
+    trace records) — the trace records feed ``tracing.verify_traces`` so
+    the chaos gate also proves the observability contract held under
+    faults (exactly-one-terminal span trees, no duplicate trace ids)."""
+    events, n_samples, traces = [], 0, []
     with open(path) as f:
         for line in f:
             try:
@@ -211,7 +222,9 @@ def _mine_jsonl(path: str):
                 events.append(rec)
             elif rec.get("kind") == "sample":
                 n_samples += 1
-    return events, n_samples
+            elif rec.get("kind") == "trace":
+                traces.append(rec)
+    return events, n_samples, traces
 
 
 def bench_chaos_failover(arch="gcn", backend="dense", *, n_nodes=2048,
@@ -254,6 +267,8 @@ def bench_chaos_failover(arch="gcn", backend="dense", *, n_nodes=2048,
         LaneFault(lane=kill_lane, at_round=at_round)])
     # the flight recorder persists (intentionally — it is the run's
     # post-mortem artifact, uploaded by CI and rendered by neurascope)
+    if os.path.dirname(jsonl_path):
+        os.makedirs(os.path.dirname(jsonl_path), exist_ok=True)
     srv = build(chaos, jsonl_path)
     with srv:
         srv.warmup()
@@ -272,7 +287,11 @@ def bench_chaos_failover(arch="gcn", backend="dense", *, n_nodes=2048,
         trig = chaos.triggered_wall_times()
         trigger_rel = (min(trig.values()) - srv.telemetry.t0
                        if trig else None)
-    events, n_samples = _mine_jsonl(jsonl_path)
+    events, n_samples, trace_recs = _mine_jsonl(jsonl_path)
+    from repro.serve import verify_traces
+    trace_probs = verify_traces(trace_recs)
+    for p in trace_probs[:5]:
+        print(f"  trace contract violation: {p}")
 
     lost = sum(1 for r in reqs if not r.done or r.error is not None)
     dup = sum(1 for r in reqs if r.n_settles != 1)
@@ -315,6 +334,9 @@ def bench_chaos_failover(arch="gcn", backend="dense", *, n_nodes=2048,
         "flight_recorder_samples": n_samples,
         "flight_recorder_ok": len(events) > 0 and n_samples > 0,
         "flight_recorder_path": jsonl_path,
+        "trace_records": len(trace_recs),
+        "trace_violations": len(trace_probs),
+        "trace_contract_ok": bool(trace_recs) and not trace_probs,
     }
 
 
@@ -367,6 +389,112 @@ def bench_chaos_overload(arch="gcn", backend="dense", *, n_nodes=2048,
         "shed_typed_ok": bool(typed_ok and shed >= 1),
         "lost_accepted": lost, "duplicate_results": dup,
         "accepted_served_ok": lost == 0 and dup == 0,
+    }
+
+
+def bench_slo_shed(arch="gcn", backend="dense", *, n_nodes=2048,
+                   n_edges=8192, d_in=16, fanouts=(5, 3), max_batch=8,
+                   waves=40, seed=0) -> dict:
+    """Per-class SLO burn-rate shedding under a serving-but-slow load:
+    targets far below the achievable latency drive every class's burn rate
+    over threshold, and the engine must shed **best_effort before any
+    interactive request** (``SHED_ORDER``; interactive is never SLO-shed —
+    the queue-HWM backstop stays class-blind).  The record also proves the
+    exposition endpoint is truthful: the scraped per-class p99 must land
+    within one histogram bucket of ``stats()['classes']`` and the exported
+    burn-rate gauge must track the engine's own summary.
+
+    Windows are long relative to the run (fast 5 s / slow 30 s) so the
+    burn rate is stable between the scrape and the summary read — the
+    whole burst stays inside both windows."""
+    import urllib.request
+    from repro.serve import ClassSLO, ClusterServer, Overloaded
+    from repro.serve.metrics import (bucket_index,
+                                     histogram_counts_from_samples,
+                                     parse_exposition, quantile_from_counts)
+    cfg, params, indptr, indices, store = _world(arch, backend, n_nodes,
+                                                 n_edges, d_in, seed)
+    rng = np.random.default_rng(seed + 7)
+    slos = [ClassSLO("interactive", 1.0, 0.01),
+            ClassSLO("batch", 1.0, 0.05),
+            ClassSLO("best_effort", 1.0, 0.20)]
+    srv = ClusterServer(arch, cfg, params, indptr, indices, store,
+                        n_lanes=2, mode="replicated", placement="stacked",
+                        fanouts=fanouts, backend=backend,
+                        max_batch_seeds=max_batch, max_wait_ms=2.0,
+                        seed=seed, telemetry_interval=0.02,
+                        slo=slos, slo_fast_window=5.0, slo_slow_window=30.0,
+                        slo_burn_threshold=2.0, slo_sustain_ticks=1,
+                        slo_recover_ticks=10**6, metrics_port=0)
+    shed = {"interactive": 0, "batch": 0, "best_effort": 0}
+    served = {"interactive": 0, "best_effort": 0}
+    served_int_post_shed = 0
+    with srv:
+        srv.warmup()
+        for _ in range(waves):
+            pend = []
+            for cls in ("interactive", "best_effort", "interactive",
+                        "best_effort"):
+                try:
+                    pend.append(srv.submit(
+                        rng.integers(0, n_nodes, 2), cls=cls))
+                    served[cls] += 1
+                    if cls == "interactive" and shed["best_effort"]:
+                        served_int_post_shed += 1
+                except Overloaded as e:
+                    shed[e.cls or "interactive"] += 1
+            for r in pend:
+                r.wait_done(timeout=60)
+            if shed["best_effort"] >= 8 and served_int_post_shed >= 8:
+                break
+        # the hub keeps ticking; give it one interval so the burn gauges
+        # include everything observed above, then scrape + summarize
+        time.sleep(0.06)
+        with urllib.request.urlopen(srv.stats()["metrics_url"],
+                                    timeout=10) as resp:
+            fams = parse_exposition(resp.read().decode())
+        summary = srv.slo.summary()
+        first_shed = next((e for e in srv.telemetry.events
+                           if e.get("event") == "shed_class"
+                           and e.get("on")), None)
+    hist = fams.get("neurachip_request_latency_seconds",
+                    {}).get("samples", [])
+    burn = {}
+    for _n, labels, v, _ex in fams.get("neurachip_slo_burn_rate",
+                                       {}).get("samples", []):
+        if labels.get("window") == "fast":
+            burn[labels.get("class")] = v
+    p99_dist, burn_dev = -1, 0.0
+    for cls, s in summary.items():
+        if not s["n"]:
+            continue
+        counts = histogram_counts_from_samples(hist, {"class": cls})
+        scraped_i = quantile_from_counts(counts, 0.99)
+        exact_i = bucket_index(s["p99_ms"] / 1e3)
+        p99_dist = max(p99_dist, abs(scraped_i - exact_i))
+        ref = max(abs(s["burn_fast"]), 1.0)
+        burn_dev = max(burn_dev,
+                       abs(burn.get(cls, 0.0) - s["burn_fast"]) / ref)
+    ordering_ok = (shed["best_effort"] >= 1 and shed["interactive"] == 0
+                   and first_shed is not None
+                   and first_shed["cls"] == "best_effort")
+    export_ok = 0 <= p99_dist <= 1 and burn_dev <= 0.25
+    return {
+        "kind": "slo_shed", "arch": arch, "backend": backend,
+        "n_nodes": n_nodes, "n_lanes": 2,
+        "submitted_interactive": served["interactive"],
+        "submitted_best_effort": served["best_effort"],
+        "shed_interactive": shed["interactive"],
+        "shed_batch": shed["batch"],
+        "shed_best_effort": shed["best_effort"],
+        "first_shed_class": first_shed["cls"] if first_shed else None,
+        "interactive_served_post_shed": served_int_post_shed,
+        "burn_fast_best_effort": round(
+            summary["best_effort"]["burn_fast"], 2),
+        "scrape_p99_bucket_dist_max": int(p99_dist),
+        "scrape_burn_rel_dev_max": round(burn_dev, 4),
+        "slo_shed_ordering_ok": bool(ordering_ok),
+        "slo_export_match_ok": bool(export_ok),
     }
 
 
@@ -433,6 +561,65 @@ def bench_tracing_overhead(arch="gcn", backend="dense", *, n_nodes=2048,
     }
 
 
+def bench_metrics_overhead(arch="gcn", backend="dense", *, n_nodes=2048,
+                           n_edges=8192, d_in=16, fanouts=(5, 3),
+                           max_batch=8, seeds_per_request=4, n_requests=192,
+                           reps=5, seed=0) -> dict:
+    """Metrics-plane budget at cluster scale: the fully instrumented server
+    (registry + per-class latency histograms + SLO engine + exposition
+    endpoint live and scrapable) vs a bare one, same interleaved
+    best-of-``reps`` closed loop as ``bench_tracing_overhead``.  Gated at
+    ``metrics_overhead_ok`` ≤ ``MAX_METRICS_OVERHEAD_PCT`` — streaming
+    instruments must be cheap enough to leave on in production."""
+    import contextlib
+    import gc
+    from repro.serve import ClusterServer
+    cfg, params, indptr, indices, store = _world(arch, backend, n_nodes,
+                                                 n_edges, d_in, seed)
+    rng = np.random.default_rng(seed + 5)
+    traces = [rng.integers(0, n_nodes, seeds_per_request)
+              for _ in range(n_requests)]
+
+    def closed_loop(srv) -> float:
+        t0 = time.perf_counter()
+        for s in traces:
+            srv.submit(s).wait(600)
+        return len(traces) / (time.perf_counter() - t0)
+
+    rates = {False: 0.0, True: 0.0}
+    with contextlib.ExitStack() as stack:
+        servers = {}
+        for metrics in (False, True):
+            srv = ClusterServer(arch, cfg, params, indptr, indices, store,
+                                n_lanes=N_LANES, mode="replicated",
+                                placement="stacked", fanouts=fanouts,
+                                backend=backend, max_batch_seeds=max_batch,
+                                max_wait_ms=2.0, seed=seed,
+                                slo=metrics or None,
+                                metrics_port=0 if metrics else None)
+            stack.enter_context(srv)
+            srv.warmup()
+            for s in traces[:16]:
+                srv.submit(s).wait(600)
+            servers[metrics] = srv
+        for _ in range(reps):
+            for metrics in (False, True):
+                rates[metrics] = max(rates[metrics],
+                                     closed_loop(servers[metrics]))
+    gc.collect()
+    overhead_pct = 100.0 * (1.0 - rates[True] / rates[False])
+    return {
+        "kind": "metrics_overhead", "arch": arch, "backend": backend,
+        "n_lanes": N_LANES, "n_requests": n_requests,
+        "seeds_per_request": seeds_per_request,
+        "bare_reqs_per_s": round(rates[False], 2),
+        "metered_reqs_per_s": round(rates[True], 2),
+        "metrics_overhead_pct": round(overhead_pct, 2),
+        "metrics_overhead_ok": bool(overhead_pct
+                                    <= MAX_METRICS_OVERHEAD_PCT),
+    }
+
+
 def collect_chaos() -> list:
     records = []
     r = bench_chaos_failover()
@@ -447,6 +634,14 @@ def collect_chaos() -> list:
     print(f"  overload: shed {r['shed_submissions']}/{r['n_requests']} "
           f"({100 * r['shed_rate']:.0f}%) typed={r['shed_typed_ok']} "
           f"accepted_served={r['accepted_served_ok']}")
+    records.append(r)
+    r = bench_slo_shed()
+    print(f"  slo_shed: best_effort={r['shed_best_effort']} "
+          f"batch={r['shed_batch']} interactive={r['shed_interactive']} "
+          f"first={r['first_shed_class']} "
+          f"burn={r['burn_fast_best_effort']:.1f}x "
+          f"ordering={r['slo_shed_ordering_ok']} "
+          f"export_match={r['slo_export_match_ok']}")
     records.append(r)
     return records
 
@@ -473,6 +668,12 @@ def collect(**kw) -> dict:
           f"on {r['traced_reqs_per_s']:9.1f} req/s  "
           f"overhead {r['tracing_overhead_pct']:+.1f}% "
           f"(ok={r['tracing_overhead_ok']})")
+    records.append(r)
+    r = bench_metrics_overhead()
+    print(f"  metrics : off {r['bare_reqs_per_s']:9.1f} req/s  "
+          f"on {r['metered_reqs_per_s']:9.1f} req/s  "
+          f"overhead {r['metrics_overhead_pct']:+.1f}% "
+          f"(ok={r['metrics_overhead_ok']})")
     records.append(r)
     records.extend(collect_chaos())
     from repro.sparse.stats import stats as kernel_stats_snapshot
@@ -560,6 +761,11 @@ def check(data: dict, *, tol: float = 1e-5, min_scaling: float = 1.7,
             print("FAIL chaos_failover: telemetry JSONL recorded no "
                   "events/samples")
             failures += 1
+        if not cf.get("trace_contract_ok", True):
+            print(f"FAIL chaos_failover: {cf.get('trace_violations')} "
+                  "span-tree contract violation(s) in the flight recorder "
+                  "(verify_traces)")
+            failures += 1
     to = by_kind.get("tracing_overhead")
     if gate("tracing_overhead") and to is not None \
             and (not to["tracing_overhead_ok"]
@@ -568,6 +774,34 @@ def check(data: dict, *, tol: float = 1e-5, min_scaling: float = 1.7,
               f"{to['tracing_overhead_pct']}% cluster req/s "
               f"(> {MAX_TRACING_OVERHEAD_PCT}% budget)")
         failures += 1
+    mo = by_kind.get("metrics_overhead")
+    if gate("metrics_overhead") and mo is not None \
+            and (not mo["metrics_overhead_ok"]
+                 or mo["metrics_overhead_pct"] > MAX_METRICS_OVERHEAD_PCT):
+        print(f"FAIL metrics_overhead: metrics plane costs "
+              f"{mo['metrics_overhead_pct']}% cluster req/s "
+              f"(> {MAX_METRICS_OVERHEAD_PCT}% budget)")
+        failures += 1
+    ss = by_kind.get("slo_shed")
+    if not gate("slo_shed"):
+        pass
+    elif ss is None:
+        print("FAIL slo_shed: no record")
+        failures += 1
+    else:
+        if not ss["slo_shed_ordering_ok"]:
+            print(f"FAIL slo_shed: shed precedence violated "
+                  f"(best_effort={ss['shed_best_effort']} "
+                  f"interactive={ss['shed_interactive']} "
+                  f"first={ss['first_shed_class']}; best_effort must shed "
+                  "first and interactive never)")
+            failures += 1
+        if not ss["slo_export_match_ok"]:
+            print(f"FAIL slo_shed: scraped exposition disagrees with the "
+                  f"engine summary (p99 bucket dist "
+                  f"{ss['scrape_p99_bucket_dist_max']} > 1 or burn dev "
+                  f"{ss['scrape_burn_rel_dev_max']} > 0.25)")
+            failures += 1
     co = by_kind.get("chaos_overload")
     if not gate("chaos_overload"):
         pass
@@ -587,8 +821,9 @@ def check(data: dict, *, tol: float = 1e-5, min_scaling: float = 1.7,
         scope = "chaos" if kinds else "full"
         print(f"cluster gate OK ({scope}): scaling ≥ {min_scaling}x, "
               f"parity ≤ {tol:.0e}, sharded bitwise, rebalance < "
-              f"{max_spread}x, failover zero-lost/exactly-once, "
-              "overload shed typed")
+              f"{max_spread}x, failover zero-lost/exactly-once + trace "
+              "contract, overload shed typed, slo shed ordered + export "
+              "truthful")
     return failures
 
 

@@ -30,6 +30,11 @@ A ``tracing_overhead`` record prices NeuraScope's request tracing
 untraced req/s, best-of-trials each.  The budget is ≤5% overhead with
 tracing ON (``tracing_overhead_ok``, trajectory-gated) — tracing OFF costs
 nothing by construction (the span hooks are ``None``-guarded out).
+A ``metrics_overhead`` record prices the streaming metrics plane
+(DESIGN.md §15) the same way — registry + latency histogram + live
+``/metrics`` endpoint scraped mid-run — gated ≤5%
+(``metrics_overhead_ok``), with the scrape doubling as the endpoint smoke
+(``metrics_families_ok``: every required family present and parseable).
 
 Results go to ``BENCH_serving.json`` (atomic write; the file also carries a
 ``kernel_stats`` snapshot of the compute-plane counter registry);
@@ -56,6 +61,11 @@ DEFAULT_CELLS = (("gcn", "dense", "host"), ("gcn", "pallas", "host"),
                  ("gcn", "dense", "device"), ("gcn", "pallas_q8", "device"))
 MIN_FUSION_GAIN = 1.1   # single-lane floor: fused sampling must clearly win
 MAX_TRACING_OVERHEAD_PCT = 5.0   # NeuraScope budget: traced req/s loss cap
+MAX_METRICS_OVERHEAD_PCT = 5.0   # metrics-plane budget: metered req/s loss
+# exposition families the scrape smoke requires from a metered GNNServer
+REQUIRED_FAMILIES = ("neurachip_requests_total",
+                     "neurachip_request_latency_seconds",
+                     "neurachip_queue", "neurachip_cache_hit_rate")
 
 
 def bench_cell(arch: str, backend: str, sampler: str = "host", *,
@@ -271,6 +281,78 @@ def bench_tracing_overhead(arch: str = "gcn", backend: str = "dense", *,
     }
 
 
+def bench_metrics_overhead(arch: str = "gcn", backend: str = "dense", *,
+                           n_nodes=2048, n_edges=8192, d_in=32,
+                           fanouts=(5, 3), n_requests=48, trials=5,
+                           workers=2, seed=0) -> dict:
+    """Price of the streaming metrics plane on the closed-loop single-lane
+    path — same interleaved best-of-``trials`` harness as
+    ``bench_tracing_overhead``, but the instrumented arm runs with the
+    registry, per-request latency histogram, pull gauges, AND the live
+    exposition endpoint (scraped mid-run, so the measurement includes a
+    real scrape racing the serve loop).  Doubles as the metrics smoke:
+    the scrape must parse and contain every ``REQUIRED_FAMILIES`` entry
+    (``metrics_families_ok``).  Gated at ``metrics_overhead_ok`` ≤
+    ``MAX_METRICS_OVERHEAD_PCT``."""
+    import contextlib
+    import urllib.request
+
+    from repro.launch.gnn_serve import build_world
+    from repro.serve import GNNServer
+    from repro.serve.metrics import parse_exposition
+
+    cfg, params, indptr, indices, store = build_world(
+        arch, n_nodes, n_edges, d_in, seed=seed)
+    rng = np.random.default_rng(seed + 4)
+    seeds = rng.integers(0, n_nodes, n_requests)
+
+    def one_trial(server) -> float:
+        t0 = time.perf_counter()
+        for s in seeds:
+            server.submit([int(s)]).wait(600)
+        return n_requests / (time.perf_counter() - t0)
+
+    rates = {False: 0.0, True: 0.0}
+    fams = {}
+    with contextlib.ExitStack() as stack:
+        servers = {}
+        for metrics in (False, True):
+            server = GNNServer(arch, cfg, params, indptr, indices, store,
+                               fanouts=fanouts, backend=backend,
+                               max_batch_seeds=16, max_wait_ms=2.0,
+                               n_workers=workers, seed=seed,
+                               metrics_port=0 if metrics else None)
+            stack.enter_context(server)
+            server.warmup()
+            for s in seeds[:8]:
+                server.submit([int(s)]).wait(600)
+            servers[metrics] = server
+        url = servers[True].stats()["metrics_url"]
+        for i in range(trials):
+            for metrics in (False, True):
+                rates[metrics] = max(rates[metrics],
+                                     one_trial(servers[metrics]))
+            if i == trials // 2:       # a live scrape inside the window
+                with urllib.request.urlopen(url, timeout=10) as resp:
+                    fams = parse_exposition(resp.read().decode())
+    off, on = rates[False], rates[True]
+    overhead_pct = 100.0 * (1.0 - on / off)
+    missing = [f for f in REQUIRED_FAMILIES if not fams.get(f, {})
+               .get("samples")]
+    return {
+        "kind": "metrics_overhead", "arch": arch, "backend": backend,
+        "fanouts": list(fanouts), "n_requests": n_requests,
+        "bare_reqs_per_s": round(off, 2),
+        "metered_reqs_per_s": round(on, 2),
+        "metrics_overhead_pct": round(overhead_pct, 2),
+        "scraped_families": len(fams),
+        "missing_families": missing,
+        "metrics_families_ok": not missing,
+        "metrics_overhead_ok": bool(overhead_pct
+                                    <= MAX_METRICS_OVERHEAD_PCT),
+    }
+
+
 def collect(cells=DEFAULT_CELLS, **kw) -> dict:
     records = []
     for cell in cells:
@@ -297,6 +379,14 @@ def collect(cells=DEFAULT_CELLS, **kw) -> dict:
           f"on {to['traced_reqs_per_s']:.0f} req/s  "
           f"overhead {to['tracing_overhead_pct']:+.1f}% "
           f"(ok={to['tracing_overhead_ok']})")
+    mo = bench_metrics_overhead()
+    records.append(mo)
+    print(f"  metrics {mo['arch']}/{mo['backend']}: "
+          f"off {mo['bare_reqs_per_s']:.0f} req/s  "
+          f"on {mo['metered_reqs_per_s']:.0f} req/s  "
+          f"overhead {mo['metrics_overhead_pct']:+.1f}% "
+          f"(ok={mo['metrics_overhead_ok']} "
+          f"families={mo['metrics_families_ok']})")
     from repro.sparse.stats import stats as kernel_stats_snapshot
     return {"bench": "serving", "records": records,
             "kernel_stats": kernel_stats_snapshot()}
@@ -330,6 +420,21 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
                       f"(> {MAX_TRACING_OVERHEAD_PCT}% budget; "
                       f"{r['traced_reqs_per_s']} vs "
                       f"{r['untraced_reqs_per_s']} req/s)")
+                failures += 1
+            continue
+        if r.get("kind") == "metrics_overhead":
+            cell = f"metrics {r['arch']}/{r['backend']}"
+            if not r["metrics_overhead_ok"] \
+                    or r["metrics_overhead_pct"] > MAX_METRICS_OVERHEAD_PCT:
+                print(f"FAIL {cell}: metrics plane costs "
+                      f"{r['metrics_overhead_pct']}% req/s "
+                      f"(> {MAX_METRICS_OVERHEAD_PCT}% budget; "
+                      f"{r['metered_reqs_per_s']} vs "
+                      f"{r['bare_reqs_per_s']} req/s)")
+                failures += 1
+            if not r["metrics_families_ok"]:
+                print(f"FAIL {cell}: exposition scrape missing families "
+                      f"{r['missing_families']}")
                 failures += 1
             continue
         if r.get("kind") == "serve_single_lane":
@@ -368,7 +473,8 @@ def check(data: dict, *, tol: float = 1e-5, min_speedup: float = 3.0,
         print(f"serving gate OK: {len(data['records'])} cells, parity ≤ "
               f"{tol:.0e} (f32) / q8 envelope, 0 steady-state recompiles, "
               f"speedup ≥ {min_speedup}x, fusion gain ≥ {MIN_FUSION_GAIN}x, "
-              f"tracing ≤ {MAX_TRACING_OVERHEAD_PCT}%")
+              f"tracing ≤ {MAX_TRACING_OVERHEAD_PCT}%, metrics ≤ "
+              f"{MAX_METRICS_OVERHEAD_PCT}% + families")
     return failures
 
 

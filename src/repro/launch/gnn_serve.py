@@ -87,13 +87,21 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
                            stall_timeout=args.stall_timeout,
                            restart_after=args.restart_after,
                            shed_queue_hwm=args.shed_hwm,
-                           scale_min_lanes=args.scale_min_lanes)
+                           scale_min_lanes=args.scale_min_lanes,
+                           slo=True if args.slo else None,
+                           metrics_port=args.metrics_port)
     with server:
+        if args.metrics_port is not None:
+            print(f"[gnn-serve] metrics exposition at "
+                  f"{server._metrics_server.url} "
+                  f"(watch live: python -m repro.launch.neurascope "
+                  f"{server._metrics_server.url} --live)")
         server.warmup()
         warm_builds = server.steps.builds
         server.reset_stats()
         t0 = time.perf_counter()
-        reqs = server.submit_many(traces, deadline_ms=args.deadline_ms)
+        reqs = server.submit_many(traces, deadline_ms=args.deadline_ms,
+                                  cls=args.request_class)
         server.drain()
         dt = time.perf_counter() - t0
         st = server.stats()
@@ -115,6 +123,13 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
                   f"reroutes={st['reroutes']} retries={st['retries']} "
                   f"timeouts={st['timeouts']} shed={st['shed']} "
                   f"failed={st['failed']}")
+        if args.slo:
+            for cls, s in st.get("classes", {}).items():
+                print(f"[gnn-serve] slo {cls:<12} n={s['n']:<6} "
+                      f"viol={s['violations']:<6} "
+                      f"burn(fast/slow)={s['burn_fast']:.2f}/"
+                      f"{s['burn_slow']:.2f} p99={s['p99_ms']:.1f}ms"
+                      + ("  SHED" if s["shed"] else ""))
         served_once = sum(1 for r in reqs
                           if r.n_settles == 1 and r.error is None)
         settled = sum(1 for r in reqs if r.done)
@@ -189,6 +204,18 @@ def main():
     ap.add_argument("--scale-min-lanes", type=int, default=None,
                     help="enable telemetry-driven elastic lane parking "
                          "down to this floor (default: disabled)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the Prometheus-style /metrics exposition "
+                         "from a background HTTP thread on this port "
+                         "(0 = ephemeral; launch.metrics_server)")
+    ap.add_argument("--slo", action="store_true",
+                    help="enable per-class SLO burn-rate shedding "
+                         "(cluster path; serve.slo defaults: best_effort "
+                         "sheds before batch, interactive never)")
+    ap.add_argument("--request-class", default="interactive",
+                    choices=["interactive", "batch", "best_effort"],
+                    help="request class the generated traffic is tagged "
+                         "with (cluster path)")
     ap.add_argument("--chaos-kill-lane", type=int, default=None,
                     metavar="LANE",
                     help="chaos: kill this lane mid-stream (deterministic "

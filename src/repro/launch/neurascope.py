@@ -1,14 +1,24 @@
 """NeuraScope — the paper-style performance visualizer over the serving
-flight recorder and the committed bench trajectory (DESIGN.md §14).
+flight recorder and the committed bench trajectory (DESIGN.md §14–15).
 
   # render a self-contained HTML report from a chaos-bench flight recorder
-  PYTHONPATH=src python -m repro.launch.neurascope BENCH_chaos_flight.jsonl \
-      --bench BENCH_serving.json BENCH_cluster.json --out neurascope.html
+  PYTHONPATH=src python -m repro.launch.neurascope \
+      artifacts/BENCH_chaos_flight.jsonl \
+      --bench BENCH_serving.json BENCH_cluster.json \
+      --out artifacts/neurascope.html
 
   # CI smoke: terminal summary + schema/span-tree validation (exit != 0 on
   # a malformed recorder)
-  PYTHONPATH=src python -m repro.launch.neurascope BENCH_chaos_flight.jsonl \
-      --summary --check
+  PYTHONPATH=src python -m repro.launch.neurascope \
+      artifacts/BENCH_chaos_flight.jsonl --summary --check
+
+  # live dashboard: auto-refreshing terminal panels (per-lane heat, SLO
+  # burn rate, kernel-counter sparklines) off a /metrics endpoint or a
+  # growing flight-recorder JSONL
+  PYTHONPATH=src python -m repro.launch.neurascope \
+      http://127.0.0.1:9100/metrics --live
+  PYTHONPATH=src python -m repro.launch.neurascope \
+      artifacts/BENCH_chaos_flight.jsonl --live --interval 0.5
 
 Three data sources, one report:
 
@@ -37,7 +47,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.serve.tracing import SCHEMA_VERSION, verify_traces
 
-DEFAULT_OUT = "neurascope.html"
+DEFAULT_OUT = os.path.join("artifacts", "neurascope.html")
 WATERFALL_TRACES = 12            # slowest traces rendered
 STAGE_COLORS = {
     "submit": "#9aa0a6", "route": "#8ab4f8", "sample": "#81c995",
@@ -52,14 +62,26 @@ _FALLBACK_COLOR = "#d2d4d7"
 # Loading
 # ---------------------------------------------------------------------------
 
+def _generations(path: str) -> List[str]:
+    """Rotation siblings oldest-first: ``<path>.N`` … ``<path>.1``, then
+    the live file — the hub's bounded N-generation rotation order."""
+    gens = []
+    k = 1
+    while os.path.exists(f"{path}.{k}"):
+        gens.append(f"{path}.{k}")
+        k += 1
+    return list(reversed(gens)) + [path]
+
+
 def load_flight(path: str) -> Tuple[Dict[str, list], dict]:
-    """Parse a flight-recorder JSONL (rotated ``.1`` sibling first, so the
-    timeline is in order).  Returns ``(records_by_kind, meta)``; unknown
-    kinds are counted, not dropped errors — the schema is append-only."""
+    """Parse a flight-recorder JSONL (rotated generations first, oldest to
+    newest, so the timeline is in order).  Returns ``(records_by_kind,
+    meta)``; unknown kinds are counted, not dropped errors — the schema is
+    append-only."""
     recs: Dict[str, list] = {"event": [], "sample": [], "trace": []}
     meta = {"files": [], "bad_lines": 0, "other_kinds": 0,
             "version_errors": []}
-    for p in (path + ".1", path):
+    for p in _generations(path):
         if not os.path.exists(p):
             continue
         meta["files"].append(p)
@@ -434,10 +456,189 @@ def check(recs: Dict[str, list], meta: dict) -> int:
     return len(errors)
 
 
+# ---------------------------------------------------------------------------
+# Live dashboard (--live): auto-refreshing terminal panels
+# ---------------------------------------------------------------------------
+
+SPARK = "▁▂▃▄▅▆▇█"
+HISTORY = 32                     # sparkline window (frames)
+
+
+def spark(values: List[float], width: int = HISTORY) -> str:
+    vals = list(values)[-width:]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    span = max(hi - lo, 1e-12)
+    return "".join(SPARK[min(int((v - lo) / span * len(SPARK)),
+                             len(SPARK) - 1)] for v in vals)
+
+
+def heat_bar(frac: float, width: int = 20) -> str:
+    frac = min(max(frac, 0.0), 1.0)
+    full = int(round(frac * width))
+    return "█" * full + "·" * (width - full)
+
+
+def scrape_panels(url: str) -> dict:
+    """One scrape of a /metrics endpoint → panel-ready numbers."""
+    import urllib.request
+
+    from repro.serve.metrics import (histogram_counts_from_samples,
+                                     parse_exposition, quantile_from_counts,
+                                     bucket_upper)
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        fams = parse_exposition(resp.read().decode())
+
+    def samples(name):
+        return fams.get(name, {}).get("samples", [])
+
+    lanes: Dict[str, Dict[str, float]] = {}
+    for _n, labels, v, _ex in samples("neurachip_lane"):
+        lanes.setdefault(labels.get("lane", "?"),
+                         {})[labels.get("field", "?")] = v
+    classes: Dict[str, Dict[str, float]] = {}
+    for _n, labels, v, _ex in samples("neurachip_slo_burn_rate"):
+        classes.setdefault(labels.get("class", "?"),
+                           {})[f"burn_{labels.get('window')}"] = v
+    for _n, labels, v, _ex in samples("neurachip_slo_shed"):
+        classes.setdefault(labels.get("class", "?"), {})["shed"] = v
+    hist = samples("neurachip_request_latency_seconds")
+    for cls in list(classes) or ["default"]:
+        match = {"class": cls} if classes else {}
+        counts = histogram_counts_from_samples(hist, match)
+        if sum(counts):
+            i = quantile_from_counts(counts, 0.99)
+            classes.setdefault(cls, {})["p99_ms"] = bucket_upper(i) * 1e3
+            classes[cls]["n"] = float(sum(counts))
+    counters: Dict[str, float] = {}
+    for _n, labels, v, _ex in samples("neurachip_kernel_total"):
+        counters[labels.get("name", "?")] = v
+    for _n, labels, v, _ex in samples("neurachip_requests_total"):
+        counters[f"requests.{labels.get('class', '')}."
+                 f"{labels.get('outcome', '')}"] = v
+    return {"lanes": lanes, "classes": classes, "counters": counters}
+
+
+def tail_panels(path: str, state: dict) -> dict:
+    """Incremental flight-recorder tail → the same panel structure (burn
+    rates are endpoint-only; the JSONL source shows lanes + events)."""
+    events = state.setdefault("events", {})
+    offset = state.get("offset", 0)
+    if os.path.exists(path):
+        with open(path) as f:
+            f.seek(0, 2)
+            end = f.tell()
+            if end < offset:          # rotated under us: start over
+                offset = 0
+            f.seek(offset)
+            for line in f:
+                if not line.endswith("\n"):
+                    break             # partial write: re-read next frame
+                offset += len(line.encode())
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    continue
+                if rec.get("kind") == "sample":
+                    state["sample"] = rec
+                elif rec.get("kind") == "event":
+                    ev = rec.get("event", "?")
+                    events[ev] = events.get(ev, 0) + 1
+    state["offset"] = offset
+    lanes: Dict[str, Dict[str, float]] = {}
+    sample = state.get("sample")
+    if sample:
+        for lane, entry in enumerate(sample.get("lanes", [])):
+            lanes[str(lane)] = {k: float(v) for k, v in entry.items()}
+        for cname, vals in (sample.get("counters") or {}).items():
+            for lane, v in enumerate(vals):
+                lanes.setdefault(str(lane), {})[cname] = float(v)
+    return {"lanes": lanes, "classes": {},
+            "counters": {f"event.{k}": float(v) for k, v in events.items()}}
+
+
+def render_frame(panels: dict, history: Dict[str, List[float]],
+                 source: str, frame: int) -> str:
+    out = [f"NeuraScope live — {source}  (frame {frame})", ""]
+    lanes = panels["lanes"]
+    if lanes:
+        depth_max = max((l.get("queue_depth", 0.0) for l in lanes.values()),
+                        default=0.0) or 1.0
+        out.append("  lane  queue")
+        for lane in sorted(lanes, key=lambda s: int(s) if s.isdigit() else 0):
+            l = lanes[lane]
+            d = l.get("queue_depth", 0.0)
+            out.append(f"  {lane:>4}  {heat_bar(d / depth_max)} "
+                       f"depth={d:5.0f} inflight={l.get('inflight', 0):4.0f} "
+                       f"p99={l.get('p99_ms', 0):7.1f}ms "
+                       f"occ={l.get('occupancy', 0):5.2f}")
+        out.append("")
+    classes = panels["classes"]
+    if classes:
+        out.append("  class        burn(fast)  burn(slow)  p99       shed")
+        for cls in sorted(classes):
+            c = classes[cls]
+            key = f"burn.{cls}"
+            history.setdefault(key, []).append(c.get("burn_fast", 0.0))
+            out.append(
+                f"  {cls:<12} {c.get('burn_fast', 0.0):9.2f}x "
+                f"{c.get('burn_slow', 0.0):10.2f}x "
+                f"{c.get('p99_ms', 0.0):7.1f}ms "
+                f"{'  SHED' if c.get('shed') else '    ok'}  "
+                f"{spark(history[key])}")
+        out.append("")
+    counters = panels["counters"]
+    if counters:
+        out.append("  counter sparklines (per-frame deltas)")
+        shown = 0
+        for name in sorted(counters):
+            key = f"ctr.{name}"
+            hist = history.setdefault(key, [])
+            prev = history.get(f"_abs.{key}", [0.0])[-1]
+            history[f"_abs.{key}"] = [counters[name]]
+            hist.append(max(counters[name] - prev, 0.0))
+            if len(history[f"_abs.{key}"]) and shown < 12:
+                out.append(f"  {name:<36.36} {counters[name]:12.0f} "
+                           f"{spark(hist)}")
+                shown += 1
+    return "\n".join(out) + "\n"
+
+
+def live(source: str, *, interval: float, frames: int) -> int:
+    """Auto-refreshing dashboard: scrape a /metrics URL or tail a JSONL.
+    ``frames=0`` runs until interrupted; a finite count is the CI mode."""
+    import time as _time
+    is_url = source.startswith("http://") or source.startswith("https://")
+    history: Dict[str, List[float]] = {}
+    tail_state: dict = {}
+    frame = 0
+    try:
+        while True:
+            frame += 1
+            try:
+                panels = (scrape_panels(source) if is_url
+                          else tail_panels(source, tail_state))
+                body = render_frame(panels, history, source, frame)
+            except Exception as e:  # noqa: BLE001 — endpoint racing shutdown
+                body = (f"NeuraScope live — {source}  (frame {frame})\n"
+                        f"  (unreachable: {e})\n")
+            if frames == 0:
+                sys.stdout.write("\x1b[2J\x1b[H")    # clear + home
+            sys.stdout.write(body)
+            sys.stdout.flush()
+            if frames and frame >= frames:
+                return 0
+            _time.sleep(interval)
+    except KeyboardInterrupt:
+        return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="NeuraScope: flight-recorder + trajectory visualizer")
-    ap.add_argument("flight", help="telemetry/tracing JSONL flight recorder")
+    ap.add_argument("flight", help="telemetry/tracing JSONL flight recorder "
+                                   "(or, with --live, a /metrics URL)")
     ap.add_argument("--bench", nargs="*", default=None, metavar="JSON",
                     help="BENCH_*.json files for kernel stats + trajectory "
                          "(default: any BENCH_*.json in the cwd)")
@@ -448,7 +649,18 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="validate schema + span trees; exit nonzero on "
                          "any malformed record")
+    ap.add_argument("--live", action="store_true",
+                    help="auto-refreshing terminal dashboard off a /metrics "
+                         "endpoint URL or a growing flight-recorder JSONL")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="--live refresh period in seconds (default 1.0)")
+    ap.add_argument("--frames", type=int, default=0,
+                    help="--live frame budget; 0 = run until interrupted "
+                         "(finite counts are the CI smoke mode)")
     args = ap.parse_args(argv)
+
+    if args.live:
+        return live(args.flight, interval=args.interval, frames=args.frames)
 
     recs, meta = load_flight(args.flight)
     if not meta["files"]:
@@ -469,6 +681,9 @@ def main(argv=None) -> int:
             p for p in os.listdir(".")
             if p.startswith("BENCH_") and p.endswith(".json"))
     doc = render_html(recs, meta, load_benches(bench_paths))
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         f.write(doc)
     print(f"neurascope: wrote {args.out} "

@@ -15,6 +15,11 @@ Planes over the engines PRs 1–3 built:
                    source of truth for stats), lane supervision/failover in
                    ``ClusterServer``, typed failures (``errors``), and
                    deterministic fault injection (``chaos``) — DESIGN.md §13;
+* metrics plane  — ``metrics.MetricsRegistry`` (log-bucketed mergeable
+                   histograms with trace-id exemplars, gauges, counters,
+                   Prometheus-style exposition) and ``slo.SLOEngine``
+                   (per-class burn-rate tracking feeding the shed arm:
+                   best_effort drops before batch, interactive never);
 * measurement    — ``benchmarks/serving_bench.py`` → ``BENCH_serving.json``,
                    ``benchmarks/cluster_bench.py`` → ``BENCH_cluster.json``.
 
@@ -37,7 +42,11 @@ from repro.serve.engine import (GNNServer, SamplerPool, offline_inference,
 from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
                                 Overloaded, RetriesExhausted, SamplerError,
                                 ServeError, ServerClosed, TransientStepError)
+from repro.serve.metrics import (LatencyHistogram, MetricsRegistry,
+                                 parse_exposition)
 from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
+from repro.serve.slo import CLASSES, DEFAULT_SLOS, SHED_ORDER, ClassSLO, \
+    SLOEngine
 from repro.serve.telemetry import TelemetryHub, percentiles_ms
 from repro.serve.tracing import (SCHEMA_VERSION, TERMINAL_SPANS, Tracer,
                                  verify_trace, verify_traces)
@@ -54,6 +63,8 @@ __all__ = [
     "TransientStepError", "RetriesExhausted", "Overloaded", "LaneFailure",
     "ServerClosed",
     "LaneSlotPools", "SlotPool", "pack_fifo",
+    "LatencyHistogram", "MetricsRegistry", "parse_exposition",
+    "CLASSES", "DEFAULT_SLOS", "SHED_ORDER", "ClassSLO", "SLOEngine",
     "TelemetryHub", "percentiles_ms",
     "SCHEMA_VERSION", "TERMINAL_SPANS", "Tracer",
     "verify_trace", "verify_traces",

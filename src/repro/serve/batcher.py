@@ -44,6 +44,8 @@ class ServeRequest:
     t_ready: float = 0.0              # sampling finished, joined the queue
     t_done: float = 0.0               # result materialized
     deadline: Optional[float] = None  # absolute clock time; None = none
+    cls: str = "interactive"          # request class (serve.slo): SLO
+    #                                   objective + shed precedence
     attempts: int = 0                 # dispatch attempts (transient retries)
     reroutes: int = 0                 # lane re-assignments (failover)
     trees: Optional[list] = None      # per-seed SampledSubgraph (data plane)

@@ -81,6 +81,7 @@ from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
                                 Overloaded, RetriesExhausted, SamplerError,
                                 ServeError, ServerClosed, TransientStepError)
 from repro.serve.scheduler import LaneSlotPools
+from repro.serve.slo import CLASSES, DEFAULT_SLOS, SLOEngine
 from repro.serve.telemetry import TelemetryHub
 from repro.serve.tracing import Tracer
 from repro.sparse.plan import plan_cache_info
@@ -282,6 +283,11 @@ class ClusterServer:
                  auto_restart: bool = True,
                  shed_queue_hwm: Optional[float] = None,
                  shed_sustain_ticks: int = 2,
+                 slo=None, slo_fast_window: float = 1.0,
+                 slo_slow_window: float = 5.0,
+                 slo_burn_threshold: float = 2.0,
+                 slo_sustain_ticks: int = 2, slo_recover_ticks: int = 4,
+                 metrics: bool = False, metrics_port: Optional[int] = None,
                  scale_min_lanes: Optional[int] = None,
                  scale_up_depth: float = 8.0, scale_down_depth: float = 0.25,
                  scale_sustain_ticks: int = 4,
@@ -381,6 +387,49 @@ class ClusterServer:
         self._scale_hi = 0
         self._scale_lo = 0
 
+        # online metrics plane + per-class SLO burn-rate shedding (both
+        # opt-in — chaos convention: None when off, one ``is None`` test
+        # per call site when the arm is dark)
+        self.metrics = None
+        self._metrics_server = None
+        self._m_requests = self._m_latency = None
+        self._m_cache = self._m_router = None
+        if metrics or metrics_port is not None or slo is not None:
+            from repro.serve.metrics import MetricsRegistry
+            self.metrics = MetricsRegistry()
+            self._m_requests = self.metrics.counter(
+                "requests_total", "settled cluster requests by class/outcome")
+            self._m_latency = self.metrics.histogram(
+                "request_latency_seconds",
+                "end-to-end request latency by class")
+            self._m_cache = self.metrics.gauge(
+                "cache_hit_rate", "host plan/step cache hit rates")
+            self._m_router = self.metrics.gauge(
+                "drhm_router", "DRHM routing-plane state")
+            self.metrics.connect_hub(self.telemetry)
+            self.metrics.connect_kernel_stats()
+            self.metrics.register_pull(self._pull_metrics)
+        self.slo: Optional[SLOEngine] = None
+        if slo is not None:
+            if isinstance(slo, SLOEngine):
+                self.slo = slo
+            else:
+                self.slo = SLOEngine(
+                    DEFAULT_SLOS if slo is True else slo,
+                    fast_window=slo_fast_window,
+                    slow_window=slo_slow_window,
+                    burn_threshold=slo_burn_threshold,
+                    sustain_ticks=slo_sustain_ticks,
+                    recover_ticks=slo_recover_ticks,
+                    registry=self.metrics, clock=clock)
+            self.telemetry.add_tick(self._slo_tick)
+        if metrics_port is not None:
+            # launch-layer import stays lazy: serve never pays for the
+            # HTTP stack unless the endpoint is actually requested
+            from repro.launch.metrics_server import MetricsServer
+            self._metrics_server = MetricsServer(self.metrics.render,
+                                                 port=metrics_port)
+
         # request plane: one dynamic batcher per lane + in-flight slot pools
         self.batchers = [DynamicBatcher(self.max_batch_seeds,
                                         max_wait_ms / 1e3, clock=clock)
@@ -454,24 +503,35 @@ class ClusterServer:
         self.telemetry.start()
 
     # -- request plane ------------------------------------------------------
-    def _check_admission(self, n: int = 1):
+    def _check_admission(self, n: int = 1, cls: str = "interactive"):
         if self._closing:
             raise RuntimeError("cluster is closed; no lane will serve this")
-        if self._shedding:
+        # two shedders, one door: the class-blind queue-HWM backstop sheds
+        # everything; the SLO burn-rate engine sheds only the classes it
+        # has dropped (best_effort before batch, never interactive)
+        slo_shed = self.slo is not None and self.slo.should_shed(cls)
+        if self._shedding or slo_shed:
             with self._rid_lock:
                 self.telemetry.count("shed", 0, n)
+            if self._m_requests is not None:
+                self._m_requests.inc(n, outcome="shed", **{"class": cls})
             depth = float(np.sum(self.queue_depths()))
             if self.tracer is not None:
                 # rejected before a rid exists — a single-span terminal
                 # trace is the whole story of a shed submission
-                self.tracer.point("shed", {"n": int(n), "depth": depth})
+                self.tracer.point("shed", {"n": int(n), "depth": depth,
+                                           "cls": cls})
             raise Overloaded(
                 depth, retry_after_s=self.telemetry.interval
-                * self.shed_sustain_ticks)
+                * self.shed_sustain_ticks,
+                cls=cls if slo_shed else None)
 
-    def submit(self, seeds, *,
-               deadline_ms: Optional[float] = None) -> ServeRequest:
-        self._check_admission()
+    def submit(self, seeds, *, deadline_ms: Optional[float] = None,
+               cls: str = "interactive") -> ServeRequest:
+        if cls not in CLASSES:
+            raise ValueError(f"unknown request class {cls!r}; "
+                             f"expected one of {CLASSES}")
+        self._check_admission(cls=cls)
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
         n_graph = self.indptr.shape[0] - 1
         if seeds.size == 0 or seeds.size > self.max_batch_seeds:
@@ -487,7 +547,7 @@ class ClusterServer:
             self._next_rid += 1
             now = self.clock()
             req = ServeRequest(
-                rid=rid, seeds=seeds, t_submit=now,
+                rid=rid, seeds=seeds, t_submit=now, cls=cls,
                 deadline=(now + deadline_ms / 1e3
                           if deadline_ms is not None else None))
             self.requests[rid] = req
@@ -509,8 +569,8 @@ class ClusterServer:
         return req
 
     def submit_many(self, seed_lists: Sequence, *,
-                    deadline_ms: Optional[float] = None
-                    ) -> List[ServeRequest]:
+                    deadline_ms: Optional[float] = None,
+                    cls: str = "interactive") -> List[ServeRequest]:
         """Bulk ingest: validate, rid-assign, and DRHM-route a whole burst
         in vectorized passes, then hand the block to the sampler pool as one
         group.  Per-request ``submit()`` costs ~80µs under load (locks,
@@ -521,7 +581,10 @@ class ClusterServer:
         requests (the burst is routed in chunks), and each request's lane is
         pinned when its chunk is routed.  Under load shedding the whole
         call is rejected (``Overloaded``) — callers submit in chunks."""
-        self._check_admission(len(seed_lists))
+        if cls not in CLASSES:
+            raise ValueError(f"unknown request class {cls!r}; "
+                             f"expected one of {CLASSES}")
+        self._check_admission(len(seed_lists), cls=cls)
         seed_arrs = [np.atleast_1d(np.asarray(s, np.int64))
                      for s in seed_lists]
         if not seed_arrs:
@@ -543,7 +606,7 @@ class ClusterServer:
             rid0 = self._next_rid
             self._next_rid += len(seed_arrs)
             reqs = [ServeRequest(rid=rid0 + i, seeds=a, t_submit=now,
-                                 deadline=deadline)
+                                 deadline=deadline, cls=cls)
                     for i, a in enumerate(seed_arrs)]
             for req in reqs:
                 self.requests[req.rid] = req
@@ -635,6 +698,9 @@ class ClusterServer:
                 self._lane_finished[req.lane] += 1
             if req.fail(err, now):
                 self.telemetry.count("failed", req.lane)
+                if self._m_requests is not None:
+                    self._m_requests.inc(1, outcome="failed",
+                                         **{"class": req.cls})
                 if self.tracer is not None:
                     self.tracer.settle(req.rid, "error", now, now,
                                        {"error": type(err).__name__,
@@ -654,6 +720,45 @@ class ClusterServer:
             self.telemetry.count("sampler_faults",
                                  req.lane if req.lane is not None else 0)
             self._settle_fail(req, err)
+
+    # -- SLO / metrics plane ------------------------------------------------
+    def _slo_tick(self, sample: dict):
+        """Monitor-tick hook: advance the burn-rate engine; every shed-set
+        transition becomes a ``shed_class`` telemetry event (so the flight
+        recorder and the chaos bench see the precedence order)."""
+        for ev in self.slo.tick():
+            self.telemetry.event("shed_class", cls=ev["cls"], on=ev["on"],
+                                 burn_fast=round(ev["burn_fast"], 4),
+                                 burn_slow=round(ev["burn_slow"], 4))
+
+    def _pull_metrics(self):
+        """Render-time gauge refresh: cache hit rates and routing-plane
+        state that already live in host bookkeeping — no feeder thread."""
+        info = self.steps.info()
+        tries = info["hits"] + info["builds"]
+        self._m_cache.set(info["hits"] / tries if tries else 0.0,
+                          cache="step")
+        with self._stats_lock:
+            rounds, hits = self.n_rounds, self.bucket_hits
+        self._m_cache.set(hits / rounds if rounds else 0.0, cache="bucket")
+        self._m_router.set(float(self.router.reseeds), field="reseeds")
+        self._m_router.set(float(self.router.epoch), field="epoch")
+        depths = np.maximum(self.queue_depths(), 0)
+        self._m_router.set(utilization_spread(depths)
+                           if depths.sum() else 1.0, field="queue_spread")
+
+    def _observe_settled(self, req: ServeRequest):
+        """Per-request metrics/SLO observation at the settle site.  The rid
+        doubles as the exemplar trace id — the histogram bucket a latency
+        lands in links straight to its NeuraScope span tree."""
+        if self.slo is not None:
+            # the engine writes the shared latency histogram itself
+            self.slo.observe(req.cls, req.latency, exemplar=str(req.rid))
+        elif self._m_latency is not None:
+            self._m_latency.observe(req.latency, exemplar=str(req.rid),
+                                    **{"class": req.cls})
+        if self._m_requests is not None:
+            self._m_requests.inc(1, outcome="served", **{"class": req.cls})
 
     # -- supervision plane (monitor tick) -----------------------------------
     def _supervise(self, sample: dict):
@@ -947,6 +1052,8 @@ class ClusterServer:
                 if req.finish(out[lane, row:row + k].copy(), now):
                     self.telemetry.count("served", req.lane)
                     self.telemetry.observe_latency(req.lane, req.latency)
+                    if self.metrics is not None:
+                        self._observe_settled(req)
                     if tr is not None:
                         settles.append((req.rid, "settle", now, now,
                                         self._lane_attrs[lane]))
@@ -1094,6 +1201,10 @@ class ClusterServer:
                 **self.telemetry.merged_percentiles(),
                 **({"tracing": self.tracer.stats()}
                    if self.tracer is not None else {}),
+                **({"classes": self.slo.summary()}
+                   if self.slo is not None else {}),
+                **({"metrics_url": self._metrics_server.url}
+                   if self._metrics_server is not None else {}),
             }
 
     def close(self, timeout: float = 60.0):
@@ -1122,6 +1233,8 @@ class ClusterServer:
                                        {"error": "ServerClosed"})
             self.telemetry.event("close_forced", pending=len(pending))
         self.telemetry.stop()
+        if self._metrics_server is not None:
+            self._metrics_server.close()
 
     def __enter__(self):
         return self

@@ -201,6 +201,7 @@ class GNNServer:
                  step_cache_size: int = 16, inflight: int = 2,
                  chaos=None, max_retries: int = 1,
                  tracing: bool = False, trace_capacity: int = 4096,
+                 metrics: bool = False, metrics_port: Optional[int] = None,
                  clock=time.monotonic):
         self.arch_id = arch_id
         self.cfg = cfg
@@ -241,6 +242,29 @@ class GNNServer:
         self.n_deadline_failed = 0
         self.latencies: "collections.deque[float]" = collections.deque(
             maxlen=4096)
+
+        # online metrics plane (opt-in; chaos convention — None when off,
+        # one ``is None`` test on the settle path when dark)
+        self.metrics = None
+        self._metrics_server = None
+        self._m_latency = self._m_requests = None
+        if metrics or metrics_port is not None:
+            from repro.serve.metrics import MetricsRegistry
+            self.metrics = MetricsRegistry()
+            self._m_latency = self.metrics.histogram(
+                "request_latency_seconds", "end-to-end request latency")
+            self._m_requests = self.metrics.counter(
+                "requests_total", "settled requests by outcome")
+            self._m_queue = self.metrics.gauge(
+                "queue", "dynamic-batcher queue state")
+            self._m_cache = self.metrics.gauge(
+                "cache_hit_rate", "host plan/step cache hit rates")
+            self.metrics.connect_kernel_stats()
+            self.metrics.register_pull(self._pull_metrics)
+            if metrics_port is not None:
+                from repro.launch.metrics_server import MetricsServer
+                self._metrics_server = MetricsServer(self.metrics.render,
+                                                     port=metrics_port)
 
         # data plane: host sampler worker pool, or the device plane — where
         # sampling runs INSIDE the per-bucket jitted step (seeds + counter
@@ -458,6 +482,25 @@ class GNNServer:
         with self._stats_lock:
             self.n_served += len(batch)
             self.latencies.extend(r.latency for r in batch)
+        if self._m_latency is not None:
+            for r in batch:      # rid = exemplar = NeuraScope trace id
+                self._m_latency.observe(r.latency, exemplar=str(r.rid))
+            self._m_requests.inc(len(batch), outcome="served")
+
+    def _pull_metrics(self):
+        """Render-time gauge refresh — queue and cache state already lives
+        in host bookkeeping, so the scrape just reads it."""
+        info = self.batcher.info()
+        self._m_queue.set(float(info["depth"]), field="depth")
+        self._m_queue.set(float(info["depth_seeds"]), field="depth_seeds")
+        sc = self.steps.info()
+        tries = sc["hits"] + sc["builds"]
+        self._m_cache.set(sc["hits"] / tries if tries else 0.0, cache="step")
+        with self._stats_lock:
+            n_batches = int(sum(self.bucket_counts.values()))
+            hits = self.bucket_hits
+        self._m_cache.set(hits / n_batches if n_batches else 0.0,
+                          cache="bucket")
 
     def _retry_batch(self, batch: List[ServeRequest], exc: ServeError):
         """Transient device-step failure: re-queue each request once, fail
@@ -584,6 +627,8 @@ class GNNServer:
             }
         if self.tracer is not None:
             out["tracing"] = self.tracer.stats()
+        if self._metrics_server is not None:
+            out["metrics_url"] = self._metrics_server.url
         return out
 
     def close(self, timeout: float = 30.0):
@@ -613,6 +658,8 @@ class GNNServer:
                         and self.tracer is not None:
                     self.tracer.settle(req.rid, "error", now, now,
                                        {"error": "ServerClosed"})
+        if self._metrics_server is not None:
+            self._metrics_server.close()
 
     def __enter__(self):
         return self

@@ -84,15 +84,22 @@ class RetriesExhausted(ServeError):
 
 
 class Overloaded(ServeError):
-    """Load shed at submit: telemetry saw sustained queue growth and the
-    server is protecting its tail latency.  ``retry_after_s`` is the
-    backpressure signal (the monitor's re-evaluation horizon)."""
+    """Load shed at submit: telemetry saw sustained queue growth (or the
+    SLO burn-rate engine shed this request's class) and the server is
+    protecting its tail latency.  ``retry_after_s`` is the backpressure
+    signal (the monitor's re-evaluation horizon); ``cls`` names the
+    request class that was refused (``None`` for the class-blind
+    queue-HWM backstop)."""
 
-    def __init__(self, depth: float, retry_after_s: float):
-        super().__init__(f"overloaded (queue depth {depth:.0f}); "
-                         f"retry after {retry_after_s:.3f}s")
+    def __init__(self, depth: float, retry_after_s: float,
+                 cls: Optional[str] = None):
+        super().__init__(
+            f"overloaded (queue depth {depth:.0f}"
+            + (f", class {cls} shed" if cls else "")
+            + f"); retry after {retry_after_s:.3f}s")
         self.depth = depth
         self.retry_after_s = retry_after_s
+        self.cls = cls
 
 
 class LaneFailure(ServeError):

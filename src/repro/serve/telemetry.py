@@ -30,8 +30,10 @@ JSON line — the machine-readable flight recorder the chaos benchmark mines
 for recovery time and p99 spike, and ``launch.neurascope`` renders.  Every
 record carries ``schema_version`` (shared with the tracing records that
 flush through the same writer) and the file is size-bounded: past
-``jsonl_max_bytes`` it rotates once to ``<path>.1`` so a long chaos run
-can never grow the recorder without bound.
+``jsonl_max_bytes`` the generations shift (``<path>.k`` → ``<path>.k+1``,
+live file → ``<path>.1``) and the oldest beyond ``jsonl_max_files``
+archives is dropped — a long chaos run holds at most
+``(1 + jsonl_max_files) × jsonl_max_bytes`` on disk, however long it runs.
 """
 from __future__ import annotations
 
@@ -75,6 +77,7 @@ class TelemetryHub:
                  jsonl_path: Optional[str] = None, window: int = 1024,
                  history: int = 4096,
                  jsonl_max_bytes: int = 64 * 1024 * 1024,
+                 jsonl_max_files: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         if n_lanes <= 0:
             raise ValueError(f"n_lanes must be positive, got {n_lanes}")
@@ -95,6 +98,7 @@ class TelemetryHub:
         self._emit_lock = threading.Lock()
         self.jsonl_path = jsonl_path
         self.jsonl_max_bytes = max(int(jsonl_max_bytes), 1)
+        self.jsonl_max_files = max(int(jsonl_max_files), 1)
         self.jsonl_rotations = 0
         self._jsonl = open(jsonl_path, "a") if jsonl_path else None
         self._jsonl_bytes = (os.path.getsize(jsonl_path)
@@ -190,9 +194,17 @@ class TelemetryHub:
             self._jsonl.flush()
             self._jsonl_bytes += len(line)
             if self._jsonl_bytes >= self.jsonl_max_bytes:
-                # single-slot rotation: the recorder holds at most
-                # max_bytes live + max_bytes archived, however long the run
+                # bounded N-generation rotation: shift every archive one
+                # generation older (dropping the one past jsonl_max_files),
+                # then the live file becomes <path>.1
                 self._jsonl.close()
+                oldest = f"{self.jsonl_path}.{self.jsonl_max_files}"
+                if os.path.exists(oldest):
+                    os.remove(oldest)
+                for k in range(self.jsonl_max_files - 1, 0, -1):
+                    gen = f"{self.jsonl_path}.{k}"
+                    if os.path.exists(gen):
+                        os.replace(gen, f"{self.jsonl_path}.{k + 1}")
                 os.replace(self.jsonl_path, self.jsonl_path + ".1")
                 self._jsonl = open(self.jsonl_path, "a")
                 self._jsonl_bytes = 0

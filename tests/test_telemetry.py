@@ -85,6 +85,44 @@ def test_jsonl_flight_recorder(tmp_path):
     assert lines[1]["counters"]["served"] == [4, 0]
 
 
+def test_jsonl_rotation_keeps_n_generations(tmp_path):
+    """Bounded N-generation rotation: with ``jsonl_max_files=3`` the
+    recorder keeps ``.1``–``.3`` (newest→oldest archive) and never a
+    ``.4`` — regression for the single-``.1``-slot rotation that silently
+    dropped every generation but the last."""
+    path = tmp_path / "telemetry.jsonl"
+    hub, _ = _hub(n_lanes=2, jsonl_path=str(path), jsonl_max_bytes=200,
+                  jsonl_max_files=3)
+    for k in range(60):
+        hub.event("tick", k=k)
+    hub.stop()
+    assert hub.jsonl_rotations >= 5
+    archives = sorted(p.name for p in tmp_path.iterdir())
+    assert archives == ["telemetry.jsonl", "telemetry.jsonl.1",
+                        "telemetry.jsonl.2", "telemetry.jsonl.3"]
+    # reading oldest→newest (.3, .2, .1, live) yields a strictly
+    # increasing contiguous tail of the event stream ending at the newest
+    # event — exactly how ``neurascope.load_flight`` stitches generations
+    def ks(p):
+        return [json.loads(ln)["k"] for ln in p.read_text().splitlines()]
+    stream = sum((ks(tmp_path / n) for n in
+                  ("telemetry.jsonl.3", "telemetry.jsonl.2",
+                   "telemetry.jsonl.1", "telemetry.jsonl")), [])
+    assert stream == list(range(stream[0], 60))
+
+
+def test_jsonl_rotation_default_single_archive(tmp_path):
+    """Default ``jsonl_max_files=1`` preserves the old contract: one
+    ``.1`` archive, no deeper generations."""
+    path = tmp_path / "t.jsonl"
+    hub, _ = _hub(n_lanes=2, jsonl_path=str(path), jsonl_max_bytes=200)
+    for k in range(60):
+        hub.event("tick", k=k)
+    hub.stop()
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["t.jsonl", "t.jsonl.1"]
+
+
 def test_monitor_thread_samples_and_stops_cleanly():
     hub = TelemetryHub(2, interval=0.01)
     fired = threading.Event()

@@ -44,6 +44,21 @@ Plus three chaos/SLO records (DESIGN.md §13, §15), also runnable alone via
 observability planes at cluster scale (instrumented vs bare interleaved
 closed loops, each gated ≤5%), and the JSON carries a ``kernel_stats``
 snapshot of the compute-plane counter registry.
+
+Two live-mutation records (DESIGN.md §16), runnable alone via ``--mutation``
+(same partial-refresh semantics as ``--chaos``; ``--long`` stretches both
+into the nightly drill):
+
+* **mutation_drill** — ≥3 consecutive weight hot-swaps under continuous
+  load, with a streaming graph mutation (parity-proven delta re-pack +
+  atomic CSR swap) between cycles: ``swap_blackout_ms`` per cycle (first
+  post-flip dispatch minus the flip — the router-never-stalls record), zero
+  lost requests, exactly-once settlement, every request stamped with
+  exactly one weight version, all old versions drained + GCed;
+* **delta_repack** — incremental re-pack (dirty blocks only) vs cold
+  ``pack_dedup_chunks`` over the same mutated graph across several epochs:
+  ``delta_repack_speedup`` (gated ≥ 3×) at ``mutation_parity_ok`` (every
+  epoch bitwise vs the cold pack).
 """
 from __future__ import annotations
 
@@ -62,9 +77,11 @@ import numpy as np
 
 DEFAULT_JSON = "BENCH_cluster.json"
 FLIGHT_JSONL = os.path.join("artifacts", "BENCH_chaos_flight.jsonl")
+MUTATION_JSONL = os.path.join("artifacts", "BENCH_mutation_flight.jsonl")
 N_LANES = 8
 MAX_TRACING_OVERHEAD_PCT = 5.0
 MAX_METRICS_OVERHEAD_PCT = 5.0
+MIN_REPACK_SPEEDUP = 3.0
 
 
 def _one_burst(server, traces) -> float:
@@ -620,6 +637,198 @@ def bench_metrics_overhead(arch="gcn", backend="dense", *, n_nodes=2048,
     }
 
 
+def bench_mutation_drill(arch="gcn", backend="dense", *, n_nodes=2048,
+                         n_edges=8192, d_in=16, fanouts=(5, 3), max_batch=8,
+                         seeds_per_request=4, swap_cycles=3,
+                         reqs_per_cycle=64, stream_edges=96,
+                         seed=0, jsonl_path=MUTATION_JSONL) -> dict:
+    """The live-mutation drill: ≥3 consecutive checkpoint hot-swaps under
+    continuous load, with a parity-proven streaming graph mutation between
+    cycles.  ``swap_blackout_ms`` is first-dispatch-after-flip minus the
+    flip — the price of an epoch boundary as the router sees it.  The
+    delivery contract is the chaos one: zero lost, exactly-once, and every
+    request stamped with exactly one weight version; every old version must
+    drain and GC before the drill ends."""
+    import tempfile
+
+    import jax
+
+    from repro.checkpoint import store as ckpt_store
+    from repro.serve import ClusterServer, GraphStream, hot_swap
+    from repro.serve.live import _csr_to_coo
+    cfg, params, indptr, indices, store = _world(arch, backend, n_nodes,
+                                                 n_edges, d_in, seed)
+    rng = np.random.default_rng(seed + 2)
+    s0, r0 = _csr_to_coo(indptr, indices)
+
+    def _perturb(k):
+        return jax.tree.map(
+            lambda a: a * (1.0 + 0.01 * k)
+            if np.issubdtype(np.asarray(a).dtype, np.floating) else a,
+            params)
+
+    def _load(srv, n):
+        return srv.submit_many(
+            [rng.integers(0, n_nodes, seeds_per_request) for _ in range(n)])
+
+    # the flight recorder persists the swap/flush event stream — the
+    # post-mortem artifact the nightly drill uploads on failure
+    if os.path.dirname(jsonl_path):
+        os.makedirs(os.path.dirname(jsonl_path), exist_ok=True)
+    open(jsonl_path, "w").close()       # fresh recorder per drill
+    srv = ClusterServer(arch, cfg, params, indptr, indices, store,
+                        n_lanes=N_LANES, mode="replicated",
+                        placement="stacked", fanouts=fanouts,
+                        backend=backend, max_batch_seeds=max_batch,
+                        max_wait_ms=2.0, seed=seed,
+                        telemetry_jsonl=jsonl_path,
+                        telemetry_interval=0.02)
+    blackouts, flushes, all_reqs = [], [], []
+    graph_parity = True
+    del_cursor = 0
+    with srv:
+        srv.warmup()
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            for k in range(1, swap_cycles + 1):
+                ckpt_store.save(ckpt_dir, k, _perturb(k), {"cycle": k})
+            gs = GraphStream(srv, max_pending=4 * stream_edges,
+                             parity_every=1)
+            t0 = time.perf_counter()
+            for k in range(1, swap_cycles + 1):
+                all_reqs += _load(srv, reqs_per_cycle)     # in flight at flip
+                rep = hot_swap(srv, ckpt_dir, step=k, drain_timeout=120.0)
+                blackouts.append(rep.blackout_ms)
+                # streaming mutation between swap cycles, under the same load
+                for _ in range(stream_edges):
+                    gs.insert(int(rng.integers(0, n_nodes)),
+                              int(rng.integers(0, n_nodes)))
+                for _ in range(stream_edges // 4):
+                    gs.delete(int(s0[del_cursor]), int(r0[del_cursor]))
+                    del_cursor += 1
+                frep = gs.flush()
+                graph_parity = graph_parity and frep.parity_ok
+                flushes.append(frep)
+                all_reqs += _load(srv, reqs_per_cycle)
+            srv.drain(timeout=600)
+            dt = time.perf_counter() - t0
+            retired = srv.retired_versions()
+            final_version = srv.params_version
+
+    events, n_samples, _ = _mine_jsonl(jsonl_path)
+    swap_events = sum(1 for e in events if e["event"] == "params_swap")
+    lost = sum(1 for r in all_reqs if not r.done or r.error is not None)
+    dup = sum(1 for r in all_reqs if r.n_settles != 1)
+    one_version = all(r.params_version is not None
+                      and 0 <= r.params_version <= swap_cycles
+                      for r in all_reqs)
+    finite = [b for b in blackouts if b == b]       # drop NaN (idle flips)
+    return {
+        "kind": "mutation_drill", "arch": arch, "backend": backend,
+        "n_nodes": n_nodes, "n_edges": n_edges, "d_in": d_in,
+        "fanouts": list(fanouts), "n_lanes": N_LANES,
+        "seeds_per_request": seeds_per_request,
+        "n_requests": len(all_reqs),
+        "swap_cycles": swap_cycles,
+        "swap_blackout_ms": (round(float(np.median(finite)), 3)
+                             if finite else -1.0),
+        "swap_blackout_ms_max": (round(float(np.max(finite)), 3)
+                                 if finite else -1.0),
+        "swap_blackouts_measured": len(finite),
+        "lost_requests": lost, "duplicate_results": dup,
+        "swap_zero_lost_ok": lost == 0,
+        "swap_exactly_once_ok": dup == 0,
+        "swap_one_version_ok": bool(one_version),
+        "swap_drained_ok": retired == [] and final_version == swap_cycles,
+        "graph_flushes": len(flushes),
+        "edges_inserted": int(sum(f.inserted for f in flushes)),
+        "edges_deleted": int(sum(f.deleted for f in flushes)),
+        "graph_epochs_served": len({r.graph_epoch for r in all_reqs}),
+        "graph_parity_ok": bool(graph_parity),
+        "reqs_per_s_under_mutation": round(len(all_reqs) / dt, 2),
+        "flight_recorder_events": len(events),
+        "flight_recorder_samples": n_samples,
+        "flight_recorder_swaps": swap_events,
+        "flight_recorder_ok": swap_events >= swap_cycles and n_samples > 0,
+        "flight_recorder_path": jsonl_path,
+    }
+
+
+def bench_delta_repack(*, n_nodes=4096, n_edges=60_000, batch=48,
+                       epochs=6, seed=0) -> dict:
+    """Incremental dedup-chunk re-pack (dirty blocks only) vs a cold
+    ``pack_dedup_chunks`` of the same mutated graph, host-side, over
+    ``epochs`` small delta batches on a large graph.  Parity is proven per
+    epoch (``chunks_match`` bitwise on both layouts) and once at the end
+    through the full plan — the speedup only counts if it is exact."""
+    from repro.sparse.delta import (DeltaGraphError, DeltaGraphState,
+                                    chunks_match, plans_match)
+    rng = np.random.default_rng(seed)
+    d = DeltaGraphState(rng.integers(0, n_nodes, n_edges),
+                        rng.integers(0, n_nodes, n_edges), n_nodes)
+    inc_s = cold_s = 0.0
+    parity = True
+    dirty = clean = 0
+    for _ in range(epochs):
+        for _ in range(batch):
+            d.insert_edge(int(rng.integers(0, n_nodes)),
+                          int(rng.integers(0, n_nodes)))
+        for _ in range(batch // 3):
+            k = int(rng.integers(0, d._s.size))
+            try:
+                d.delete_edge(int(d._s[k]), int(d._r[k]))
+            except DeltaGraphError:
+                pass               # every copy of that edge already booked
+        res = d.flush()
+        dirty += res.dirty_blocks
+        clean += res.clean_blocks
+        t0 = time.perf_counter()
+        inc = d.repack()
+        inc_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold = d.cold_repack()
+        cold_s += time.perf_counter() - t0
+        for a, b in zip(inc, cold):
+            ok, _ = chunks_match(a, b)
+            parity = parity and ok
+    ok, _ = plans_match(d.plan(), d.cold_plan())
+    parity = parity and ok
+    return {
+        "kind": "delta_repack", "n_nodes": n_nodes, "n_edges": n_edges,
+        "epochs": epochs, "batch_inserts": batch,
+        "batch_deletes": batch // 3,
+        "dirty_blocks": int(dirty), "clean_blocks": int(clean),
+        "incremental_repack_s": round(inc_s, 4),
+        "cold_repack_s": round(cold_s, 4),
+        "delta_repack_speedup": (round(cold_s / inc_s, 2)
+                                 if inc_s > 0 else -1.0),
+        "mutation_parity_ok": bool(parity),
+    }
+
+
+def collect_mutation(long: bool = False) -> list:
+    records = []
+    r = bench_mutation_drill(swap_cycles=6 if long else 3,
+                             reqs_per_cycle=96 if long else 64,
+                             stream_edges=256 if long else 96)
+    print(f"  mutation: {r['swap_cycles']} swaps, blackout "
+          f"{r['swap_blackout_ms']:.1f}ms (max "
+          f"{r['swap_blackout_ms_max']:.1f}ms)  lost={r['lost_requests']} "
+          f"dup={r['duplicate_results']} one_version="
+          f"{r['swap_one_version_ok']} drained={r['swap_drained_ok']}  "
+          f"graph +{r['edges_inserted']}/-{r['edges_deleted']} over "
+          f"{r['graph_flushes']} flushes parity={r['graph_parity_ok']}")
+    records.append(r)
+    r = bench_delta_repack(epochs=12 if long else 6)
+    n_blocks = r["dirty_blocks"] + r["clean_blocks"]
+    print(f"  repack  : cold {r['cold_repack_s'] * 1e3:8.1f}ms vs "
+          f"incremental {r['incremental_repack_s'] * 1e3:8.1f}ms -> "
+          f"{r['delta_repack_speedup']:.1f}x  "
+          f"parity={r['mutation_parity_ok']} "
+          f"(dirty {r['dirty_blocks']}/{n_blocks} blocks)")
+    records.append(r)
+    return records
+
+
 def collect_chaos() -> list:
     records = []
     r = bench_chaos_failover()
@@ -676,6 +885,7 @@ def collect(**kw) -> dict:
           f"(ok={r['metrics_overhead_ok']})")
     records.append(r)
     records.extend(collect_chaos())
+    records.extend(collect_mutation())
     from repro.sparse.stats import stats as kernel_stats_snapshot
     return {"bench": "cluster", "records": records,
             "kernel_stats": kernel_stats_snapshot()}
@@ -817,13 +1027,65 @@ def check(data: dict, *, tol: float = 1e-5, min_scaling: float = 1.7,
             print(f"FAIL chaos_overload: {co['lost_accepted']} accepted "
                   f"request(s) lost / {co['duplicate_results']} duplicated")
             failures += 1
+    md = by_kind.get("mutation_drill")
+    if not gate("mutation_drill"):
+        pass
+    elif md is None:
+        print("FAIL mutation_drill: no record")
+        failures += 1
+    else:
+        if md["swap_cycles"] < 3:
+            print(f"FAIL mutation_drill: only {md['swap_cycles']} swap "
+                  "cycle(s); the drill requires >= 3 consecutive hot-swaps")
+            failures += 1
+        if md["lost_requests"] or not md["swap_zero_lost_ok"]:
+            print(f"FAIL mutation_drill: {md['lost_requests']} request(s) "
+                  "lost across the swap cycles (must be 0)")
+            failures += 1
+        if md["duplicate_results"] or not md["swap_exactly_once_ok"]:
+            print(f"FAIL mutation_drill: {md['duplicate_results']} "
+                  "request(s) settled more than once")
+            failures += 1
+        if not md["swap_one_version_ok"]:
+            print("FAIL mutation_drill: a request was served without a "
+                  "single well-defined params version")
+            failures += 1
+        if not md["swap_drained_ok"]:
+            print("FAIL mutation_drill: an old params version was never "
+                  "drained + GCed")
+            failures += 1
+        if not (md["swap_blackouts_measured"] >= 1
+                and md["swap_blackout_ms"] >= 0):
+            print("FAIL mutation_drill: swap_blackout_ms was never "
+                  "measured (no dispatch observed after any flip)")
+            failures += 1
+        if not md["graph_parity_ok"]:
+            print("FAIL mutation_drill: a streaming graph flush failed "
+                  "parity vs the cold re-pack")
+            failures += 1
+    dr = by_kind.get("delta_repack")
+    if not gate("delta_repack"):
+        pass
+    elif dr is None:
+        print("FAIL delta_repack: no record")
+        failures += 1
+    else:
+        if not dr["mutation_parity_ok"]:
+            print("FAIL delta_repack: incremental layouts are not "
+                  "bitwise/1e-5 equal to the cold pack")
+            failures += 1
+        if dr["delta_repack_speedup"] < MIN_REPACK_SPEEDUP:
+            print(f"FAIL delta_repack: {dr['delta_repack_speedup']}x < "
+                  f"{MIN_REPACK_SPEEDUP}x over cold pack_dedup_chunks")
+            failures += 1
     if not failures:
-        scope = "chaos" if kinds else "full"
+        scope = "partial: " + ", ".join(sorted(kinds)) if kinds else "full"
         print(f"cluster gate OK ({scope}): scaling ≥ {min_scaling}x, "
               f"parity ≤ {tol:.0e}, sharded bitwise, rebalance < "
               f"{max_spread}x, failover zero-lost/exactly-once + trace "
               "contract, overload shed typed, slo shed ordered + export "
-              "truthful")
+              "truthful, mutation drill zero-lost/one-version + repack "
+              f"≥ {MIN_REPACK_SPEEDUP}x at parity")
     return failures
 
 
@@ -837,6 +1099,13 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos", action="store_true",
                     help="run only the chaos scenarios and refresh their "
                          "records inside the JSON (other kinds are kept)")
+    ap.add_argument("--mutation", action="store_true",
+                    help="run only the live-mutation drill (hot-swap + "
+                         "delta re-pack) and refresh its records inside "
+                         "the JSON (other kinds are kept)")
+    ap.add_argument("--long", action="store_true",
+                    help="nightly drill sizing: more swap cycles and a "
+                         "longer mutation stream (with --mutation)")
     args = ap.parse_args(argv)
 
     if args.check_json:
@@ -851,8 +1120,12 @@ def main(argv=None) -> int:
               "the host-platform flag; run this module in its own process")
         return 2
     path = args.json or DEFAULT_JSON
-    if args.chaos:
-        records = collect_chaos()
+    if args.chaos or args.mutation:
+        records = []
+        if args.chaos:
+            records += collect_chaos()
+        if args.mutation:
+            records += collect_mutation(long=args.long)
         fresh_kinds = {r["kind"] for r in records}
         try:
             with open(path) as f:

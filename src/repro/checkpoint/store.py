@@ -11,12 +11,21 @@ Layout on disk (one directory per step):
 
 Fault-tolerance properties:
 * atomic-by-marker: readers only trust committed steps → crash-safe;
+* validated restore: ``restore`` raises a typed ``CheckpointError`` on a
+  missing commit marker, an unreadable/incomplete manifest, or any leaf
+  whose manifest shape mismatches ``like_tree`` — a torn or foreign
+  checkpoint can never restore garbage into a live server (the hot-swap
+  path, DESIGN.md §16, depends on this);
 * async: ``save_async`` snapshots to host memory synchronously (cheap) and
   writes in a background thread — training continues;
 * elastic: ``restore`` maps leaves onto ANY mesh/sharding (the manifest is
   topology-free), so a job can restart on a different device count and
   reshard — the elastic-scaling path;
-* retention: ``gc_keep_last`` prunes old steps.
+* retention: ``gc_keep_last`` prunes old steps, and coordinates with
+  in-flight async saves through a process-wide registry: a step whose save
+  has not committed yet is both protected from deletion and counted toward
+  the newest-``keep`` window, so GC racing ``save_async`` can never delete
+  the step being written (or wrongly widen the window around it).
 
 At true multi-pod scale each host would write only its addressable shards;
 on this single-host container the gather-to-host path exercises the same
@@ -35,6 +44,43 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint step failed validation (torn save, missing leaves, or a
+    manifest that does not match the requested ``like_tree``)."""
+
+
+# steps with an in-flight (pre-COMMIT) save, keyed per checkpoint dir so GC
+# for one store never shields steps of another: {resolved dir: {step, ...}}
+_INFLIGHT_LOCK = threading.Lock()
+_INFLIGHT_SAVES: dict = {}
+
+
+def _inflight_key(ckpt_dir) -> str:
+    return str(Path(ckpt_dir).resolve())
+
+
+def _register_inflight(ckpt_dir, step: int):
+    with _INFLIGHT_LOCK:
+        _INFLIGHT_SAVES.setdefault(_inflight_key(ckpt_dir), set()).add(
+            int(step))
+
+
+def _unregister_inflight(ckpt_dir, step: int):
+    with _INFLIGHT_LOCK:
+        key = _inflight_key(ckpt_dir)
+        steps = _INFLIGHT_SAVES.get(key)
+        if steps is not None:
+            steps.discard(int(step))
+            if not steps:
+                _INFLIGHT_SAVES.pop(key, None)
+
+
+def inflight_steps(ckpt_dir) -> list:
+    """Steps whose save has started but not committed yet (sorted)."""
+    with _INFLIGHT_LOCK:
+        return sorted(_INFLIGHT_SAVES.get(_inflight_key(ckpt_dir), ()))
+
+
 def _tree_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
@@ -46,24 +92,28 @@ def save(ckpt_dir, step: int, tree, metadata: Optional[dict] = None) -> Path:
     step_dir = ckpt_dir / f"step_{step:06d}"
     tmp_dir = ckpt_dir / f".tmp_step_{step:06d}_{int(time.time()*1e6)}"
     tmp_dir.mkdir(parents=True, exist_ok=True)
-    leaves, treedef = _tree_paths(tree)
-    manifest = {
-        "step": step,
-        "treedef": str(treedef),
-        "n_leaves": len(leaves),
-        "leaves": [],
-        "metadata": metadata or {},
-    }
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        np.save(tmp_dir / f"leaf_{i:05d}.npy", arr)
-        manifest["leaves"].append(
-            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
-    (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
-    (tmp_dir / "COMMIT").write_text(str(time.time()))
-    if step_dir.exists():
-        shutil.rmtree(step_dir)
-    tmp_dir.rename(step_dir)
+    _register_inflight(ckpt_dir, step)
+    try:
+        leaves, treedef = _tree_paths(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "leaves": [],
+            "metadata": metadata or {},
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(tmp_dir / f"leaf_{i:05d}.npy", arr)
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
+        (tmp_dir / "COMMIT").write_text(str(time.time()))
+        if step_dir.exists():
+            shutil.rmtree(step_dir)
+        tmp_dir.rename(step_dir)
+    finally:
+        _unregister_inflight(ckpt_dir, step)
     return step_dir
 
 
@@ -78,12 +128,18 @@ class AsyncCheckpointer:
     def save_async(self, step: int, tree, metadata=None):
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        # registered HERE (not just inside save()) so the step is shielded
+        # from gc_keep_last the moment save_async returns — there is no
+        # window where the worker hasn't started and GC can't see the step
+        _register_inflight(self.ckpt_dir, step)
 
         def worker():
             try:
                 save(self.ckpt_dir, step, host_tree, metadata)
             except BaseException as e:  # noqa: BLE001 — surfaced via wait()
                 self.last_error = e
+            finally:
+                _unregister_inflight(self.ckpt_dir, step)
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
@@ -113,24 +169,67 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def validate_step(ckpt_dir, step: int, like_tree: Any = None) -> dict:
+    """Validate a step on disk; returns its manifest or raises
+    ``CheckpointError``.  Checks: commit marker present, manifest readable
+    and complete, every leaf file present, and — when ``like_tree`` is
+    given — leaf count and per-leaf shapes matching the target tree."""
+    step_dir = Path(ckpt_dir) / f"step_{step:06d}"
+    if not (step_dir / "COMMIT").exists():
+        raise CheckpointError(
+            f"step {step} at {step_dir} has no COMMIT marker "
+            f"(torn or in-flight save) — refusing to restore")
+    try:
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(
+            f"step {step}: unreadable manifest ({e})") from e
+    leaf_meta = manifest.get("leaves")
+    if leaf_meta is None or manifest.get("n_leaves") != len(leaf_meta):
+        raise CheckpointError(
+            f"step {step}: manifest incomplete "
+            f"(n_leaves={manifest.get('n_leaves')!r} vs "
+            f"{None if leaf_meta is None else len(leaf_meta)} entries)")
+    for i in range(len(leaf_meta)):
+        if not (step_dir / f"leaf_{i:05d}.npy").exists():
+            raise CheckpointError(f"step {step}: missing leaf file {i}")
+    if like_tree is not None:
+        leaves, _ = _tree_paths(like_tree)
+        if len(leaf_meta) != len(leaves):
+            raise CheckpointError(
+                f"step {step}: leaf count mismatch — checkpoint has "
+                f"{len(leaf_meta)}, like_tree has {len(leaves)}")
+        for i, (meta, like) in enumerate(zip(leaf_meta, leaves)):
+            want = tuple(np.shape(like))
+            got = tuple(meta.get("shape", ()))
+            if got != want:
+                raise CheckpointError(
+                    f"step {step}: leaf {i} shape mismatch — "
+                    f"checkpoint {got} vs like_tree {want}")
+    return manifest
+
+
 def restore(ckpt_dir, step: int, like_tree: Any, shardings=None):
     """Load a committed step onto the CURRENT topology.
 
     like_tree provides the pytree structure (and target dtypes); shardings —
     optional matching tree of NamedSharding for elastic placement on a mesh
-    different from the one that wrote the checkpoint.
+    different from the one that wrote the checkpoint.  Raises
+    ``CheckpointError`` (never silently loads garbage) if the step is torn,
+    its manifest is unreadable, or any leaf mismatches ``like_tree``.
     """
     step_dir = Path(ckpt_dir) / f"step_{step:06d}"
-    assert (step_dir / "COMMIT").exists(), f"uncommitted checkpoint {step_dir}"
-    manifest = json.loads((step_dir / "manifest.json").read_text())
+    manifest = validate_step(ckpt_dir, step, like_tree)
     leaves, treedef = _tree_paths(like_tree)
-    assert manifest["n_leaves"] == len(leaves), \
-        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs tree {len(leaves)}"
     loaded = []
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves))
     for i, (like, sh) in enumerate(zip(leaves, shard_leaves)):
         arr = np.load(step_dir / f"leaf_{i:05d}.npy")
+        if tuple(arr.shape) != tuple(np.shape(like)):
+            raise CheckpointError(
+                f"step {step}: leaf {i} on-disk shape {tuple(arr.shape)} "
+                f"mismatches like_tree {tuple(np.shape(like))}")
         arr = arr.astype(like.dtype)
         if sh is not None:
             loaded.append(jax.device_put(arr, sh))
@@ -140,6 +239,15 @@ def restore(ckpt_dir, step: int, like_tree: Any, shardings=None):
 
 
 def gc_keep_last(ckpt_dir, keep: int = 3):
-    steps = committed_steps(ckpt_dir)
-    for s in steps[:-keep] if keep > 0 else []:
+    """Prune all but the newest ``keep`` steps.  Steps with an in-flight
+    async save count toward the window and are never deleted — GC racing
+    ``save_async`` must not delete the step being written, nor keep an
+    extra old step only to have the in-flight one commit a moment later."""
+    if keep <= 0:
+        return
+    inflight = set(inflight_steps(ckpt_dir))
+    steps = sorted(set(committed_steps(ckpt_dir)) | inflight)
+    for s in steps[:-keep]:
+        if s in inflight:
+            continue
         shutil.rmtree(Path(ckpt_dir) / f"step_{s:06d}", ignore_errors=True)

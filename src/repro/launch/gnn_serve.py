@@ -63,6 +63,46 @@ def build_world(arch: str, n_nodes: int, n_edges: int, d_in: int,
     return cfg, params, indptr, indices, FeatureStore.build(n_nodes, x=x)
 
 
+def _run_live_mutation(server, params, args):
+    """Drive the live-mutation plane (DESIGN.md §16) mid-burst:
+    ``--swap-versions`` hot-swaps from perturbed checkpoints (saved to
+    ``--ckpt-dir`` or a tempdir) interleaved with a ``--mutate-edges``
+    insert/delete stream, each flush parity-proven before install."""
+    import contextlib
+    import tempfile
+
+    import jax
+
+    from repro.checkpoint import store as ckpt_store
+    from repro.serve import GraphStream, hot_swap
+    rng = np.random.default_rng(args.seed + 7)
+    swaps, stream = [], None
+    with contextlib.ExitStack() as stack:
+        ckpt_dir = args.ckpt_dir or stack.enter_context(
+            tempfile.TemporaryDirectory())
+        for k in range(1, args.swap_versions + 1):
+            ckpt_store.save(ckpt_dir, k, jax.tree.map(
+                lambda a, _k=k: a * (1.0 + 0.01 * _k)
+                if np.issubdtype(np.asarray(a).dtype, np.floating) else a,
+                params), {"cycle": k})
+        if args.mutate_edges:
+            stream = GraphStream(server,
+                                 max_pending=args.mutation_flush_every,
+                                 parity_every=1)
+        cycles = max(args.swap_versions, 1 if args.mutate_edges else 0)
+        per_cycle = -(-args.mutate_edges // cycles) if cycles else 0
+        for k in range(1, cycles + 1):
+            if k <= args.swap_versions:
+                swaps.append(hot_swap(server, ckpt_dir, step=k))
+            for _ in range(min(per_cycle,
+                               args.mutate_edges - (k - 1) * per_cycle)):
+                stream.insert(int(rng.integers(0, args.nodes)),
+                              int(rng.integers(0, args.nodes)))
+            if stream is not None and stream.pending:
+                stream.flush()
+    return swaps, (stream.flushes if stream else [])
+
+
 def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
     """The scale-out path: N replica lanes, DRHM-routed (DESIGN.md §11),
     under the fault-tolerant control plane (DESIGN.md §13)."""
@@ -100,8 +140,22 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
         warm_builds = server.steps.builds
         server.reset_stats()
         t0 = time.perf_counter()
-        reqs = server.submit_many(traces, deadline_ms=args.deadline_ms,
-                                  cls=args.request_class)
+        swaps, flushes = [], []
+        if args.swap_versions or args.mutate_edges:
+            # split the burst around the mutation window so traffic is in
+            # flight at every flip AND some requests settle on the final
+            # version/epoch (those anchor the replay-parity check below)
+            half = len(traces) // 2
+            reqs = server.submit_many(traces[:half],
+                                      deadline_ms=args.deadline_ms,
+                                      cls=args.request_class)
+            swaps, flushes = _run_live_mutation(server, params, args)
+            reqs += server.submit_many(traces[half:],
+                                       deadline_ms=args.deadline_ms,
+                                       cls=args.request_class)
+        else:
+            reqs = server.submit_many(traces, deadline_ms=args.deadline_ms,
+                                      cls=args.request_class)
         server.drain()
         dt = time.perf_counter() - t0
         st = server.stats()
@@ -116,6 +170,21 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
         print(f"[gnn-serve] per-lane served={ls['served']} "
               f"spread={ls['served_spread']:.2f}x mean "
               f"states={ls['states']}")
+        if swaps or flushes:
+            bl = [s.blackout_ms for s in swaps
+                  if s.blackout_ms == s.blackout_ms]        # drop NaN
+            ins = sum(f.inserted for f in flushes)
+            dels = sum(f.deleted for f in flushes)
+            parity = all(f.parity_ok for f in flushes)
+            drained = server.retired_versions() == []
+            print(f"[gnn-serve] live mutation: {len(swaps)} swap(s) -> "
+                  f"v{server.params_version}"
+                  + (f" blackout_max={max(bl):.1f}ms" if bl else "")
+                  + f"  graph +{ins}/-{dels} over {len(flushes)} "
+                    f"flush(es) parity={'OK' if parity else 'FAIL'} "
+                    f"drained={'OK' if drained else 'FAIL'}")
+            if not parity or not drained:
+                return 1
         if (st["failed"] or st["timeouts"] or st["lane_deaths"]
                 or chaos is not None):
             print(f"[gnn-serve] control plane: deaths={st['lane_deaths']} "
@@ -142,14 +211,27 @@ def run_cluster(args, fanouts, cfg, params, indptr, indices, store) -> int:
                   f"{len(reqs) - served_once} request(s)")
             return 1
         if not args.skip_offline:
-            sub = reqs[:min(32, len(reqs))]
-            ref = np.concatenate([server.offline_replay(r) for r in sub])
-            got = np.concatenate([r.result for r in sub])
-            dev = float(np.abs(got - ref).max())
-            print(f"[gnn-serve] offline replay parity max|Δ| {dev:.2e} "
-                  f"({'OK' if dev <= 1e-5 else 'FAIL'})")
-            if dev > 1e-5:
-                return 1
+            # replay runs against the LIVE params/graph — requests that
+            # settled on a retired version or an older graph epoch are
+            # correct-but-unreplayable by design (old versions GC)
+            cur_ep = flushes[-1].epoch if flushes else None
+            live = [r for r in reqs
+                    if r.params_version in (None, server.params_version)
+                    and (cur_ep is None or r.graph_epoch == cur_ep)]
+            sub = live[:min(32, len(live))]
+            if not sub:
+                print("[gnn-serve] offline replay skipped (no request "
+                      "settled on the live version/epoch)")
+            else:
+                ref = np.concatenate([server.offline_replay(r)
+                                      for r in sub])
+                got = np.concatenate([r.result for r in sub])
+                dev = float(np.abs(got - ref).max())
+                print(f"[gnn-serve] offline replay parity max|Δ| {dev:.2e} "
+                      f"({'OK' if dev <= 1e-5 else 'FAIL'}, "
+                      f"{len(sub)} live-version request(s))")
+                if dev > 1e-5:
+                    return 1
     return 0
 
 
@@ -224,6 +306,22 @@ def main():
     ap.add_argument("--chaos-round", type=int, default=3,
                     help="dispatch round the --chaos-kill-lane fault "
                          "triggers at")
+    ap.add_argument("--swap-versions", type=int, default=0, metavar="N",
+                    help="live mutation (cluster path): hot-swap N "
+                         "perturbed weight versions mid-burst via the "
+                         "checkpoint store, printing per-swap blackout "
+                         "and asserting old versions drain")
+    ap.add_argument("--ckpt-dir", default=None, metavar="PATH",
+                    help="checkpoint directory --swap-versions writes to "
+                         "and swaps from (default: a tempdir)")
+    ap.add_argument("--mutate-edges", type=int, default=0, metavar="N",
+                    help="live mutation (cluster path): stream N random "
+                         "edge inserts mid-burst, parity-proven delta "
+                         "re-pack at every flush")
+    ap.add_argument("--mutation-flush-every", type=int, default=64,
+                    metavar="N",
+                    help="bounded-staleness window: the mutation stream "
+                         "auto-flushes every N buffered edges")
     args = ap.parse_args()
 
     fanouts = tuple(int(f) for f in args.fanouts.split(","))

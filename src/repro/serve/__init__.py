@@ -39,9 +39,11 @@ from repro.serve.device_sampler import (DeviceSamplerPlane,
                                         sample_forest_device, tree_key_mix)
 from repro.serve.engine import (GNNServer, SamplerPool, offline_inference,
                                 offline_replay)
-from repro.serve.errors import (DeadlineExceeded, DrainTimeout, LaneFailure,
+from repro.serve.errors import (DeadlineExceeded, DrainTimeout,
+                                GraphMutationError, HotSwapError, LaneFailure,
                                 Overloaded, RetriesExhausted, SamplerError,
                                 ServeError, ServerClosed, TransientStepError)
+from repro.serve.live import (FlushReport, GraphStream, SwapReport, hot_swap)
 from repro.serve.metrics import (LatencyHistogram, MetricsRegistry,
                                  parse_exposition)
 from repro.serve.scheduler import LaneSlotPools, SlotPool, pack_fifo
@@ -61,7 +63,8 @@ __all__ = [
     "GNNServer", "SamplerPool", "offline_inference", "offline_replay",
     "ServeError", "SamplerError", "DeadlineExceeded", "DrainTimeout",
     "TransientStepError", "RetriesExhausted", "Overloaded", "LaneFailure",
-    "ServerClosed",
+    "ServerClosed", "HotSwapError", "GraphMutationError",
+    "FlushReport", "GraphStream", "SwapReport", "hot_swap",
     "LaneSlotPools", "SlotPool", "pack_fifo",
     "LatencyHistogram", "MetricsRegistry", "parse_exposition",
     "CLASSES", "DEFAULT_SLOS", "SHED_ORDER", "ClassSLO", "SLOEngine",

@@ -53,6 +53,9 @@ class ServeRequest:
     #                                   terms — device-sampling data plane
     result: Optional[np.ndarray] = None  # (k, d_out) seed outputs
     error: Optional[BaseException] = None  # pipeline failure, re-raised
+    params_version: Optional[int] = None  # weight version the dispatch ran
+    #                                   on (live hot-swap, DESIGN.md §16)
+    graph_epoch: Optional[int] = None  # resident-graph epoch sampled on
     n_settles: int = 0                # terminal transitions taken (always ≤1)
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)

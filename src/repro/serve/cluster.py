@@ -202,6 +202,14 @@ class DRHMRouter:
         self.reseeds += 1
         self._replan()
 
+    def bump_epoch(self):
+        """Epoch flip without touching the active set or the skew counters
+        (the live weight-swap boundary, DESIGN.md §16): requests routed
+        before the flip drain on the old map/weights; the new epoch gets a
+        fresh γ permutation and a fresh utilization ledger."""
+        self.epoch += 1
+        self._replan()
+
     def rebalance(self, active_lanes: Sequence[int]):
         """Re-permute the bin space onto a new active-lane set (lane death,
         restart, or elastic park/unpark).  The map stays an exact-balance
@@ -306,7 +314,14 @@ class ClusterServer:
             raise ValueError("cluster serving needs FeatureStore.x")
         self.arch_id = arch_id
         self.cfg = cfg
-        self.params = params
+        # live weight plane (DESIGN.md §16): dispatch snapshots ONE tuple so
+        # a hot-swap is a single atomic reference flip between rounds —
+        # every request settles on exactly one (params, version) pair
+        self._live_params = (params, 0)
+        self._retired_params: Dict[int, object] = {}
+        self._version_inflight: Dict[int, int] = collections.Counter()
+        self._version_first_dispatch: Dict[int, float] = {}
+        self._last_dispatch_t: Optional[float] = None
         self.indptr = np.asarray(indptr)
         self.indices = np.asarray(indices)
         self.store = store
@@ -889,14 +904,18 @@ class ClusterServer:
         self.telemetry.event("lane_restored", lane=lane)
         self._rebalance_router()
 
-    def _shadow_warmup(self, bucket: int = 1):
+    def _shadow_warmup(self, bucket: int = 1, params=None):
+        # with ``params`` this doubles as the hot-swap shadow leg: the
+        # candidate weights run a full dummy round off the serving path
+        # (shape/dtype validation + device paging) before the flip
         import jax
+        params = self._live_params[0] if params is None else params
         step = self.steps.get((bucket,))
         struct = self._struct(bucket)
         node_ids = np.full((self.n_lanes, struct.n_nodes), -1, np.int64)
         hop_valid = np.zeros((self.n_lanes, struct.n_hop_edges), bool)
         x = self._gather(node_ids)
-        jax.block_until_ready(step(self.params, x, node_ids, hop_valid))
+        jax.block_until_ready(step(params, x, node_ids, hop_valid))
 
     def _rebalance_router(self):
         active = [i for i in range(self.n_lanes)
@@ -913,6 +932,128 @@ class ClusterServer:
 
     def lane_states(self) -> List[str]:
         return list(self._lane_state)
+
+    # -- live mutation plane (DESIGN.md §16) --------------------------------
+    @property
+    def params(self):
+        return self._live_params[0]
+
+    @params.setter
+    def params(self, value):
+        # direct assignment is a new weight version too (test/offline use);
+        # the serving path goes through install_params for the full swap
+        cur = getattr(self, "_live_params", (None, -1))
+        self._live_params = (value, cur[1] + 1)
+
+    @property
+    def params_version(self) -> int:
+        return self._live_params[1]
+
+    def install_params(self, params, version: Optional[int] = None,
+                       *, bump_router: bool = True) -> int:
+        """Atomically flip the serving weights to ``params``.
+
+        The old version's reference is retained until its last in-flight
+        round finalizes (``_finalize_one`` GCs it), so a round dispatched a
+        microsecond before the flip still settles on the weights it ran on.
+        ``bump_router`` flips the DRHM router epoch with the weights — the
+        observable epoch boundary the swap drill asserts on."""
+        old_params, old_ver = self._live_params
+        new_ver = old_ver + 1 if version is None else int(version)
+        if new_ver <= old_ver:
+            raise ValueError(f"new params version {new_ver} must exceed "
+                             f"current {old_ver} (versions are monotone)")
+        with self._stats_lock:
+            self._live_params = (params, new_ver)
+            if self._version_inflight.get(old_ver, 0) > 0:
+                # rounds still computing on the old weights: retain the ref
+                # until the last one finalizes (_finalize_one GCs it)
+                self._retired_params[old_ver] = old_params
+        if bump_router:
+            with self._router_lock:
+                self.router.bump_epoch()
+        self.telemetry.event("params_swap", version=new_ver,
+                             old_version=old_ver,
+                             router_epoch=self.router.epoch)
+        return new_ver
+
+    def version_inflight(self) -> Dict[int, int]:
+        """Weight versions with rounds still in flight → round count."""
+        with self._stats_lock:
+            return {v: c for v, c in self._version_inflight.items() if c > 0}
+
+    def retired_versions(self) -> List[int]:
+        """Old weight versions not yet drained+GCed (empty = swap settled)."""
+        with self._stats_lock:
+            return sorted(self._retired_params)
+
+    def first_dispatch_at(self, version: int) -> Optional[float]:
+        """Clock time of the first dispatch on ``version`` (blackout
+        measurement: subtract the flip time), or None if none yet."""
+        with self._stats_lock:
+            return self._version_first_dispatch.get(int(version))
+
+    def last_dispatch_at(self) -> Optional[float]:
+        with self._stats_lock:
+            return self._last_dispatch_t
+
+    def apply_graph_update(self, indptr: np.ndarray, indices: np.ndarray,
+                           *, epoch: Optional[int] = None) -> int:
+        """Install a new resident CSR (streaming edge mutations).
+
+        Node count is immutable — live mutation re-shapes edges, never the
+        id space (seed validation and the feature store depend on it).  The
+        sampler swap is one atomic tuple flip; requests sampled before the
+        flip drain on the old adjacency (bounded staleness, stamped per
+        request via ``graph_epoch``)."""
+        indptr = np.asarray(indptr)
+        indices = np.asarray(indices)
+        if indptr.shape[0] != self.indptr.shape[0]:
+            raise ValueError(
+                f"graph update changes node count ({indptr.shape[0] - 1} vs "
+                f"{self.indptr.shape[0] - 1}); live mutation is edges-only")
+        ep = self._sampler.set_graph(indptr, indices, epoch)
+        self.indptr, self.indices = indptr, indices
+        self.telemetry.event("graph_update", epoch=ep,
+                             n_edges=int(indices.shape[0]))
+        return ep
+
+    def update_feature_rows(self, row_ids, rows):
+        """Re-home updated feature rows into the resident store.
+
+        Sharded residency scatters into the γ-permuted device table at the
+        rows the existing DRHM shard plan owns (``perm[row_ids]`` — no
+        re-shard, no host round-trip of the full table); replicated
+        residency rebuilds the fetch step over the patched store."""
+        import dataclasses as _dc
+
+        import jax
+        import jax.numpy as jnp
+        row_ids = np.asarray(row_ids, np.int64).ravel()
+        rows = np.asarray(rows, np.float32)
+        if row_ids.size == 0:
+            return
+        rows = rows.reshape(row_ids.size, -1)
+        n, d = self.store.n_nodes, int(np.asarray(self.store.x).shape[1])
+        if rows.shape[1] != d:
+            raise ValueError(f"feature rows have d={rows.shape[1]}, "
+                             f"store has d={d}")
+        if row_ids.min() < 0 or row_ids.max() >= n:
+            raise ValueError(f"feature row ids out of range [0, {n})")
+        x = np.asarray(self.store.x).copy()
+        x[row_ids] = rows
+        self.store = _dc.replace(self.store, x=jnp.asarray(x))
+        if self.mode == "sharded":
+            perm_rows = jnp.asarray(
+                self.shard_plan.perm[row_ids].astype(np.int32))
+            self._x_perm = jax.block_until_ready(
+                self._x_perm.at[perm_rows].set(jnp.asarray(rows)))
+        else:
+            self._fetch_step = build_fetch_step(self.store)
+        # offline-replay parity anchor closes over the store at build time;
+        # drop the cached steps so replay sees the patched features too
+        self._offline_steps = StepCache(self._build_offline_step, maxsize=4)
+        self.telemetry.event("feature_rehome", n_rows=int(row_ids.size))
 
     # -- compute plane ------------------------------------------------------
     def _struct(self, bucket: int):
@@ -986,14 +1127,15 @@ class ClusterServer:
             node_ids[lane], hop_valid[lane] = stack_trees(ts, bucket,
                                                           self.fanouts)
         t_pack1 = self.clock() if tr is not None else 0.0
+        params, pver = self._live_params    # ONE atomic read per round
         if self.profile_annotations:
             with dispatch_annotation(
                     f"neurachip:dispatch_round:b{bucket}"):
                 x = self._gather(node_ids)
-                out = step(self.params, x, node_ids, hop_valid)
+                out = step(params, x, node_ids, hop_valid)
         else:
             x = self._gather(node_ids)
-            out = step(self.params, x, node_ids, hop_valid)  # async dispatch
+            out = step(params, x, node_ids, hop_valid)  # async dispatch
         slots = {lane: self.pools.acquire(lane, ready[lane][0].rid)
                  for lane in ready}
         now = self.clock()
@@ -1009,6 +1151,10 @@ class ClusterServer:
         with self._stats_lock:
             self.bucket_counts[bucket] += 1
             self.n_rounds += 1
+            self._version_inflight[pver] += 1
+            if pver not in self._version_first_dispatch:
+                self._version_first_dispatch[pver] = now
+            self._last_dispatch_t = now
             if self.steps.builds == warm:
                 self.bucket_hits += 1
             else:
@@ -1018,7 +1164,7 @@ class ClusterServer:
                 self.telemetry.count("seeds_dispatched", lane,
                                      sum(r.n_seeds for r in batch))
                 self._heartbeat[lane] = now
-        self._inflight.append((ready, out, slots))
+        self._inflight.append((ready, out, slots, pver))
 
     def _retry_round(self, ready: Dict[int, List[ServeRequest]],
                      exc: TransientStepError):
@@ -1040,7 +1186,7 @@ class ClusterServer:
                     self._on_sampled(req)   # re-enqueue (re-routes if dead)
 
     def _finalize_one(self):
-        ready, out, slots = self._inflight.popleft()
+        ready, out, slots, pver = self._inflight.popleft()
         out = np.asarray(out)                          # device sync
         now = self.clock()
         tr = self.tracer
@@ -1049,6 +1195,7 @@ class ClusterServer:
             row = 0
             for req in batch:
                 k = req.n_seeds
+                req.params_version = pver   # the version this result ran on
                 if req.finish(out[lane, row:row + k].copy(), now):
                     self.telemetry.count("served", req.lane)
                     self.telemetry.observe_latency(req.lane, req.latency)
@@ -1068,6 +1215,18 @@ class ClusterServer:
         with self._router_lock:
             for lane, batch in ready.items():
                 self._lane_finished[lane] += len(batch)
+        retired = None
+        with self._stats_lock:
+            self._version_inflight[pver] -= 1
+            if (self._version_inflight[pver] <= 0
+                    and pver != self._live_params[1]):
+                # last round on an old weight version settled: drop our
+                # reference — the drain+GC leg of the swap state machine
+                self._version_inflight.pop(pver, None)
+                if self._retired_params.pop(pver, None) is not None:
+                    retired = pver
+        if retired is not None:
+            self.telemetry.event("params_retired", version=retired)
 
     def _engine_loop(self):
         while not self._stop.is_set():

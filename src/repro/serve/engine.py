@@ -77,8 +77,11 @@ class SamplerPool:
                  on_ready, on_error, n_workers: int = 2,
                  tree_keys=default_tree_keys, group_cap: int = 64,
                  fault_hook=None):
-        self.indptr = np.asarray(indptr)
-        self.indices = np.asarray(indices)
+        # the resident CSR lives in ONE tuple so a live graph swap
+        # (repro.serve.live) is a single atomic reference flip: every
+        # worker snapshots the tuple once per group and never sees a
+        # torn (new indptr, old indices) pair
+        self._graph = (np.asarray(indptr), np.asarray(indices), 0)
         self.fanouts = tuple(int(f) for f in fanouts)
         self.key = key
         self.tree_keys = tree_keys
@@ -95,6 +98,27 @@ class SamplerPool:
         for w in self._workers:
             w.start()
 
+    @property
+    def indptr(self) -> np.ndarray:
+        return self._graph[0]
+
+    @property
+    def indices(self) -> np.ndarray:
+        return self._graph[1]
+
+    @property
+    def graph_epoch(self) -> int:
+        return self._graph[2]
+
+    def set_graph(self, indptr: np.ndarray, indices: np.ndarray,
+                  epoch: Optional[int] = None) -> int:
+        """Atomically swap the resident CSR (live graph mutation).  Groups
+        already snapshotted keep sampling the old arrays; every later group
+        sees the new graph whole.  Returns the new graph epoch."""
+        epoch = self._graph[2] + 1 if epoch is None else int(epoch)
+        self._graph = (np.asarray(indptr), np.asarray(indices), epoch)
+        return epoch
+
     def submit(self, req: ServeRequest):
         self._q.put(req)
 
@@ -108,7 +132,8 @@ class SamplerPool:
     def sample_for(self, seeds, rid: int) -> list:
         """The pool's sampling, re-runnable offline (parity anchor)."""
         seeds = np.atleast_1d(np.asarray(seeds, np.int64))
-        return sampler.sample_forest(self.indptr, self.indices, seeds,
+        indptr, indices, _ = self._graph
+        return sampler.sample_forest(indptr, indices, seeds,
                                      self.fanouts, key=self.key,
                                      tree_keys=self.tree_keys(
                                          rid, seeds.shape[0]))
@@ -117,15 +142,19 @@ class SamplerPool:
         if self.fault_hook is not None:
             for r in group:
                 self.fault_hook(r)
+        # one snapshot per group: every request in the group samples the
+        # same graph epoch, even if set_graph flips mid-pass
+        indptr, indices, epoch = self._graph
         seeds_all = np.concatenate([r.seeds for r in group])
         keys = np.concatenate([self.tree_keys(r.rid, r.n_seeds)
                                for r in group])
-        trees = sampler.sample_forest(self.indptr, self.indices, seeds_all,
+        trees = sampler.sample_forest(indptr, indices, seeds_all,
                                       self.fanouts, key=self.key,
                                       tree_keys=keys)
         i = 0
         for req in group:                     # assign everything first so a
             req.trees = trees[i:i + req.n_seeds]  # failure submits nothing
+            req.graph_epoch = epoch
             i += req.n_seeds
         for req in group:
             self.on_ready(req)

@@ -112,6 +112,23 @@ class LaneFailure(ServeError):
         self.reason = reason
 
 
+class HotSwapError(ServeError):
+    """A live weight hot-swap aborted before the flip (checkpoint failed
+    validation or the shadow warm-up crashed) — the serving version is
+    unchanged and traffic never saw the candidate weights."""
+
+    def __init__(self, stage: str, cause: BaseException):
+        super().__init__(f"hot swap aborted at {stage}: {cause!r}")
+        self.stage = stage
+        self.__cause__ = cause
+
+
+class GraphMutationError(ServeError):
+    """A streaming graph mutation was rejected (out-of-range node, deleting
+    an absent edge, or an incremental re-pack that failed parity against
+    the cold pack) — the resident graph is unchanged."""
+
+
 class ServerClosed(ServeError):
     """The server shut down (possibly force-closed over a wedged engine)
     with this request still unserved."""

@@ -123,6 +123,14 @@ class LatencyHistogram:
         self.count += other.count
         self.exemplars.update(other.exemplars)
 
+    def copy(self) -> "LatencyHistogram":
+        out = LatencyHistogram()
+        out.counts = list(self.counts)
+        out.sum = self.sum
+        out.count = self.count
+        out.exemplars = dict(self.exemplars)
+        return out
+
     def quantile(self, q: float) -> float:
         """Upper bound of the bucket holding the q-quantile (0.0 if empty)."""
         i = quantile_from_counts(self.counts, q)
@@ -219,8 +227,13 @@ class _Family:
             return float(self._series.get(_label_key(labels), 0))
 
     def snapshot(self) -> Dict[LabelKey, object]:
+        # deep-copy histogram series under the lock: render walks counts
+        # + count OUTSIDE any lock, and a live series mutating mid-walk
+        # would break the buckets-sum-to-_count exposition invariant
+        # (gauge/counter series are plain floats — already values)
         with self._lock:
-            return dict(self._series)
+            return {k: (h.copy() if isinstance(h, LatencyHistogram) else h)
+                    for k, h in self._series.items()}
 
 
 class MetricsRegistry:

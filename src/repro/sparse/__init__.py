@@ -1,3 +1,4 @@
 from repro.sparse import graph, plan, segment_ops, stats  # noqa: F401
 from repro.sparse import backend  # noqa: F401  (imports plan; keep after)
+from repro.sparse import delta  # noqa: F401  (live-mutation delta re-pack)
 from repro.sparse import spgemm  # noqa: F401  (registers spgemm executors)

@@ -244,6 +244,67 @@ class DedupChunks:
         return round_up(self.n_rows, self.block_rows) // self.block_rows
 
 
+def chunk_block_edges(b: int, idx: np.ndarray, rows: np.ndarray,
+                      cols: np.ndarray, block_rows: int,
+                      width_cap: int) -> list:
+    """Dedup + chunk one output block's edge set (host-side).
+
+    ``idx`` indexes the canonical edge arrays, already restricted to rows
+    of block ``b`` in canonical (stable row-sorted) order.  Returns the
+    block's chunk tuples ``(block, u_ids, edge_idx, rloc, uidx)`` — at
+    least one (possibly empty) chunk, so empty blocks still evict a zero
+    tile.  Both the cold packer and the incremental delta re-packer
+    (``sparse/delta.py``) call this helper, which is what guarantees a
+    dirty-block rebuild is chunk-identical to a cold re-pack.
+    """
+    if idx.size == 0:
+        return [(b, np.empty(0, np.int64), idx,
+                 np.empty(0, np.int64), np.empty(0, np.int64))]
+    u_ids, uinv = np.unique(cols[idx], return_inverse=True)
+    chunks = []
+    for lo in range(0, u_ids.size, width_cap):
+        hi = min(lo + width_cap, u_ids.size)
+        sel = (uinv >= lo) & (uinv < hi)
+        chunks.append((b, u_ids[lo:hi], idx[sel],
+                       rows[idx[sel]] - b * block_rows, uinv[sel] - lo))
+    return chunks
+
+
+def assemble_dedup_chunks(per_block: list, vals: np.ndarray, n_edges: int,
+                          n_rows: int, n_cols: int, block_rows: int,
+                          width_multiple: int = 16) -> DedupChunks:
+    """Assemble per-block chunk tuples (from :func:`chunk_block_edges`)
+    into the flat DedupChunks arrays.  ``width`` adapts to the graph: the
+    max distinct-operand count over chunks, rounded to ``width_multiple``
+    — balanced graphs get narrow tiles, hub-heavy ones get more chunks.
+    """
+    width = int(round_up(max(1, max((c[1].size for chunks in per_block
+                                     for c in chunks), default=1)),
+                         width_multiple))
+    n_chunks = sum(len(c) for c in per_block)
+    u_cols = np.zeros((n_chunks, width), np.int32)
+    a = np.zeros((n_chunks * block_rows, width), np.float32)
+    remaining = np.zeros(n_chunks, np.int32)
+    out_block = np.zeros(n_chunks, np.int32)
+    first = np.zeros(n_chunks, np.int32)
+    slots = np.full(n_edges, n_chunks * block_rows * width,
+                    np.int32)  # OOB default
+    k = 0
+    for chunks in per_block:
+        for i, (b, u_ids, idx, rloc, uidx) in enumerate(chunks):
+            u_cols[k, :u_ids.size] = u_ids
+            remaining[k] = u_ids.size
+            out_block[k] = b
+            first[k] = int(i == 0)
+            cell = (k * block_rows + rloc) * width + uidx
+            np.add.at(a.reshape(-1), cell, vals[idx])
+            slots[idx] = cell
+            k += 1
+    return DedupChunks(u_cols=u_cols, a=a, remaining=remaining,
+                       out_block=out_block, first=first, n_rows=n_rows,
+                       n_cols=n_cols, block_rows=block_rows, slots=slots)
+
+
 def pack_dedup_chunks(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
                       n_rows: int, n_cols: int, block_rows: int = 8,
                       width_cap: int = 128,
@@ -263,46 +324,11 @@ def pack_dedup_chunks(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     blk_sorted = rows[order] // block_rows
 
     # per block: dedup operands, split into runs of ≤ width_cap distinct
-    per_block = []            # [(block, u_ids, edge_idx, rloc, uidx)]
-    widths = [1]
     starts = np.zeros(n_blocks + 1, np.int64)
     np.add.at(starts, blk_sorted + 1, 1)
     starts = np.cumsum(starts)
-    for b in range(n_blocks):
-        idx = order[starts[b]:starts[b + 1]]
-        if idx.size == 0:
-            per_block.append([(b, np.empty(0, np.int64), idx,
-                               np.empty(0, np.int64), np.empty(0, np.int64))])
-            continue
-        u_ids, uinv = np.unique(cols[idx], return_inverse=True)
-        chunks = []
-        for lo in range(0, u_ids.size, width_cap):
-            hi = min(lo + width_cap, u_ids.size)
-            sel = (uinv >= lo) & (uinv < hi)
-            chunks.append((b, u_ids[lo:hi], idx[sel],
-                           rows[idx[sel]] - b * block_rows, uinv[sel] - lo))
-            widths.append(hi - lo)
-        per_block.append(chunks)
-    width = int(round_up(int(max(widths)), width_multiple))
-
-    n_chunks = sum(len(c) for c in per_block)
-    u_cols = np.zeros((n_chunks, width), np.int32)
-    a = np.zeros((n_chunks * block_rows, width), np.float32)
-    remaining = np.zeros(n_chunks, np.int32)
-    out_block = np.zeros(n_chunks, np.int32)
-    first = np.zeros(n_chunks, np.int32)
-    slots = np.full(e, n_chunks * block_rows * width, np.int32)  # OOB default
-    k = 0
-    for chunks in per_block:
-        for i, (b, u_ids, idx, rloc, uidx) in enumerate(chunks):
-            u_cols[k, :u_ids.size] = u_ids
-            remaining[k] = u_ids.size
-            out_block[k] = b
-            first[k] = int(i == 0)
-            cell = (k * block_rows + rloc) * width + uidx
-            np.add.at(a.reshape(-1), cell, vals[idx])
-            slots[idx] = cell
-            k += 1
-    return DedupChunks(u_cols=u_cols, a=a, remaining=remaining,
-                       out_block=out_block, first=first, n_rows=n_rows,
-                       n_cols=n_cols, block_rows=block_rows, slots=slots)
+    per_block = [chunk_block_edges(b, order[starts[b]:starts[b + 1]],
+                                   rows, cols, block_rows, width_cap)
+                 for b in range(n_blocks)]
+    return assemble_dedup_chunks(per_block, vals, e, n_rows, n_cols,
+                                 block_rows, width_multiple)
